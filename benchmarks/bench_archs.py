@@ -1,0 +1,43 @@
+"""Per-architecture parking decisions: the paper's framework applied to
+all ten assigned architectures (+ the paper's Qwen2.5-7B).
+
+For each arch: checkpoint bytes from the real param-spec tree ->
+loader_from_checkpoint (calibrated on the paper's measured Qwen trace) ->
+T* / lambda* on H100 (measured profile) and TPU-v5e (estimated profile).
+This is the paper's central table the authors could not build: the
+model-size INDEPENDENCE of the tax means T* varies only through t_load,
+so a 125M xLSTM and a 236B DeepSeek differ 200x in load time but pay the
+same 49.9 W to stay warm.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import ARCHS, get_config
+from repro.core import H100, TPU_V5E, loader_from_checkpoint
+from repro.core.breakeven import breakeven_seconds, critical_rate_per_hr, \
+    format_t_star
+from repro.models import build_param_specs, param_bytes
+
+
+def run_all() -> None:
+    print("== Per-arch parking decisions (H100 measured / TPU-v5e est.):")
+    print(f"   {'arch':22s} {'ckpt':>9s} {'t_load':>8s} "
+          f"{'T*(H100)':>9s} {'lam*(H100)':>11s} {'T*(v5e)':>9s}")
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        bytes_ = param_bytes(build_param_specs(cfg))
+        ld_h = loader_from_checkpoint(arch, bytes_, H100)
+        ld_t = loader_from_checkpoint(arch, bytes_, TPU_V5E)
+        t_h = breakeven_seconds(ld_h, H100)
+        lam = critical_rate_per_hr(ld_h, H100)
+        t_t = breakeven_seconds(ld_t, TPU_V5E)
+        rows.append((t_h, arch))
+        print(f"   {arch:22s} {bytes_/2**30:7.1f}GiB "
+              f"{ld_h.t_load_s:7.1f}s {format_t_star(t_h):>9s} "
+              f"{lam:9.1f}/hr {format_t_star(t_t):>9s}")
+        emit(f"archs.{arch}.t_star_h100_s", f"{t_h:.0f}")
+    rows.sort()
+    print(f"   -> most evictable: {rows[0][1]} (T*={format_t_star(rows[0][0])}); "
+          f"least: {rows[-1][1]} (T*={format_t_star(rows[-1][0])}) -- the "
+          f"paper's 'small models are the worst always-on candidates'.")

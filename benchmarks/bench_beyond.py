@@ -1,0 +1,86 @@
+"""Beyond-paper results (EXPERIMENTS.md section Beyond-paper):
+
+  1. exact-convention breakeven (charges loading power above bare idle):
+     shorter T*, strictly better energy on every trace.
+  2. adaptive breakeven (EWMA rate + hysteresis + Eq.13 immediate evict):
+     fixes the diurnal oscillation the paper reports (sec 8).
+  3. clairvoyant bound: fraction of offline-optimal savings captured.
+  4. MMPP heavy-tail stress (the paper's Future Work workload).
+  5. serving-level validation: ModelManager (the system) agrees with the
+     analytic simulator on Table-6 energies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import H100, PYTORCH_70B
+from repro.core import traffic
+from repro.core.scheduler import (AdaptiveBreakeven, AlwaysOn, Breakeven,
+                                  Clairvoyant, ExactBreakeven, FixedTTL)
+from repro.core.simulator import compare_policies, simulate
+from repro.serving import ModelManager, SimClock
+
+
+def bench_policies() -> str:
+    gens = {"steady": lambda s: traffic.poisson(5.0, seed=s),
+            "bursty": lambda s: traffic.bursty(seed=s),
+            "diurnal": lambda s: traffic.diurnal(seed=s),
+            "mmpp": lambda s: traffic.mmpp(seed=s)}
+    mk = lambda: [AlwaysOn(), Breakeven(PYTORCH_70B, H100),
+                  ExactBreakeven(PYTORCH_70B, H100),
+                  AdaptiveBreakeven(PYTORCH_70B, H100),
+                  Clairvoyant(PYTORCH_70B, H100)]
+    lines = []
+    for name, gen in gens.items():
+        sav = {p.name: [] for p in mk()}
+        for s in range(5):
+            arr = gen(s)
+            res = compare_policies(arr, mk(), H100, PYTORCH_70B)
+            base = res[0]
+            for r in res:
+                sav[r.policy].append(r.savings_vs(base))
+        means = {k: float(np.mean(v)) for k, v in sav.items()}
+        paper = means["breakeven-paper(T*=271s)"]
+        exact = means["breakeven-exact(T*=206s)"]
+        adapt = [v for k, v in means.items() if "adaptive" in k][0]
+        clair = means["clairvoyant-optimal"]
+        # exact convention must never lose to the paper convention
+        assert exact >= paper - 0.005, (name, exact, paper)
+        captured = adapt / clair if clair > 0 else 0.0
+        lines.append(f"{name}: paper={100*paper:.1f}% exact={100*exact:.1f}% "
+                     f"adaptive={100*adapt:.1f}% optimal={100*clair:.1f}% "
+                     f"(adaptive captures {100*captured:.0f}%)")
+        emit(f"beyond.{name}.adaptive_savings_pct", f"{100*adapt:.1f}")
+        emit(f"beyond.{name}.optimal_savings_pct", f"{100*clair:.1f}")
+    return "\n   ".join(lines)
+
+
+def bench_manager_agreement() -> str:
+    """The serving-system energy accounting must agree with the analytic
+    simulator (two independent implementations of Table 6)."""
+    arr = traffic.poisson(5.0, seed=1)
+    sim = simulate(arr, Breakeven(PYTORCH_70B, H100), H100, PYTORCH_70B)
+
+    def run_mgr():
+        mm = ModelManager(H100, clock=SimClock())
+        mm.register("m", policy=Breakeven(PYTORCH_70B, H100),
+                    loader=PYTORCH_70B)
+        mm.handle_request("m")                    # initial load
+        return mm.run_trace("m", arr.tolist(), horizon_s=24 * 3600.0)
+
+    mgr = timed("beyond.manager_trace", run_mgr)
+    sim_wh = sim.energy_wh
+    mgr_wh = mgr["energy_wh"]["total"]
+    rel = abs(mgr_wh - sim_wh) / sim_wh
+    assert rel < 0.02, (mgr_wh, sim_wh)           # within 2%
+    assert abs(mgr["cold_starts"] - sim.cold_starts) <= 2
+    emit("beyond.manager_vs_sim_rel_err", f"{rel:.4f}")
+    return (f"manager={mgr_wh:.0f}Wh sim={sim_wh:.0f}Wh rel_err={rel:.3%} "
+            f"cold {mgr['cold_starts']}/{sim.cold_starts} "
+            f"parking_tax={mgr['parking_tax_wh']:.0f}Wh")
+
+
+def run_all() -> None:
+    print("== Beyond-paper policies:\n  ", bench_policies())
+    print("== Manager/simulator agreement:", bench_manager_agreement())

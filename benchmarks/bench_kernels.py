@@ -1,0 +1,72 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU -> correctness +
+relative cost only; wall-clock MFU belongs to real TPU runs).
+
+For each kernel: allclose vs the pure-jnp oracle + per-call timing of the
+oracle path (the jnp reference is what the dry-run lowers; the kernel is
+the TPU-native swap-in).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+
+def bench_flash() -> str:
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 512, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 512, 64))
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=128)
+    got = ops.flash_attention(q, k, v, causal=True, window=128)
+    err = float(jnp.max(jnp.abs(want - got)))
+    assert err < 5e-3, err
+    fn = jax.jit(lambda: ref.flash_attention_ref(q, k, v, causal=True,
+                                                 window=128))
+    fn()  # compile
+    timed("kernels.flash_ref_512", lambda: jax.block_until_ready(fn()),
+          repeats=5)
+    emit("kernels.flash.max_err", f"{err:.2e}")
+    return f"flash max|err|={err:.2e}"
+
+
+def bench_decode() -> str:
+    q = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 128))
+    k = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 2048, 128))
+    v = jax.random.normal(jax.random.PRNGKey(2), (4, 2, 2048, 128))
+    length = jnp.array([2048, 1024, 17, 512])
+    want = ref.decode_attention_ref(q, k, v, length)
+    got = ops.decode_attention(q, k, v, length)
+    err = float(jnp.max(jnp.abs(want - got)))
+    assert err < 5e-3, err
+    fn = jax.jit(lambda: ref.decode_attention_ref(q, k, v, length))
+    fn()
+    timed("kernels.decode_ref_2k", lambda: jax.block_until_ready(fn()),
+          repeats=10)
+    emit("kernels.decode.max_err", f"{err:.2e}")
+    return f"decode max|err|={err:.2e}"
+
+
+def bench_rglru() -> str:
+    a = jax.random.uniform(jax.random.PRNGKey(0), (4, 1024, 256),
+                           minval=0.5, maxval=0.999)
+    b = jax.random.normal(jax.random.PRNGKey(1), (4, 1024, 256))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    want = ref.rglru_scan_ref(a, b, h0)
+    got = ops.rglru_scan(a, b, h0)
+    err = float(jnp.max(jnp.abs(want - got)))
+    assert err < 1e-3, err
+    fn = jax.jit(lambda: ref.rglru_scan_ref(a, b, h0))
+    fn()
+    timed("kernels.rglru_ref_1k", lambda: jax.block_until_ready(fn()),
+          repeats=10)
+    emit("kernels.rglru.max_err", f"{err:.2e}")
+    return f"rglru max|err|={err:.2e}"
+
+
+def run_all() -> None:
+    print("== Kernels:", bench_flash(), "|", bench_decode(), "|",
+          bench_rglru())

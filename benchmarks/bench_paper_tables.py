@@ -1,0 +1,192 @@
+"""Benchmarks reproducing every table of the paper, with tolerance checks
+against the published values.  One function per table; each returns a
+markdown-ish block (printed) and appends CSV rows (common.py).
+
+Paper values are hard-coded as the EXPECTED targets; a reproduction
+failure raises, so `python -m benchmarks.run` doubles as the faithfulness
+gate (EXPERIMENTS.md section Reproduction).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import (A100, H100, L40S, PYTORCH_70B, TABLE4_LOADERS)
+from repro.core.breakeven import format_t_star, table4
+from repro.core.coldstart import QWEN25_7B_H100_TRACE
+from repro.core.doseresponse import run_simulated_dose_response, table2_row
+from repro.core.impact import TABLE5
+from repro.core.phase1 import analyze_fleet
+from repro.core.scheduler import AlwaysOn, Breakeven, FixedTTL
+from repro.core.simulator import compare_policies
+from repro.core.telemetry import SimulatedPowerReader, simulate_fleet
+from repro.core import traffic
+
+# per-device thermal drift (W/hr) calibrated so the A100 reproduces its
+# paper-reported tiny-but-significant negative slope (section 4.2)
+DRIFT = {"h100": 0.0, "a100": 0.05, "l40s": 0.0}
+PROFILES = {"h100": H100, "a100": A100, "l40s": L40S}
+
+PAPER_TABLE2 = {   # (bare W, ctx W, step W, max |beta|)
+    "h100": (71.8, 121.7, 49.9, 0.02),
+    "a100": (53.7, 80.0, 26.3, 0.02),
+    "l40s": (35.6, 102.1, 66.4, 0.02),
+}
+
+
+def bench_phase1() -> str:
+    """Section 4.1: production telemetry bimodality (335,267 idle samples).
+    Uses the PRODUCTION fleet profile (SXM nodes: +70.9 W effect), not the
+    Phase-2 bench unit (+49.9 W) -- the paper's two H100 populations."""
+    ds = simulate_fleet(seed=7)
+    res = timed("phase1.analyze", lambda: analyze_fleet(ds))
+    assert res.n_raw == 336_226, res.n_raw
+    assert abs(res.n_idle - 335_267) < 2_000, res.n_idle
+    assert 60 < res.context_effect_w < 85       # paper: +70.9 W
+    assert res.cohens_d > 4.0                   # paper: 7.3
+    assert abs(res.pooled_slope_w_per_gb) < 0.2  # paper: 0.013, p=.95
+    out = (f"n={res.n_idle} bare={res.bare_mean_w:.1f}+-{res.bare_std_w:.1f} "
+           f"ctx={res.ctx_mean_w:.1f}+-{res.ctx_std_w:.1f} "
+           f"effect=+{res.context_effect_w:.1f}W d={res.cohens_d:.1f} "
+           f"pooled_slope={res.pooled_slope_w_per_gb:+.3f} "
+           f"N_eff={res.n_eff_low:.0f}-{res.n_eff_high:.0f}")
+    emit("phase1.context_effect_w", f"{res.context_effect_w:.1f}")
+    emit("phase1.cohens_d", f"{res.cohens_d:.2f}")
+    return out
+
+
+def bench_table2() -> str:
+    """Section 4.2 / Table 2: cross-architecture dose-response."""
+    lines = []
+    for key, prof in PROFILES.items():
+        dr = timed(f"table2.{key}.doseresponse",
+                   lambda p=prof, k=key: run_simulated_dose_response(
+                       p, seed=42, thermal_drift_w_per_hr=DRIFT[k]))
+        row = table2_row(dr, prof)
+        bare, ctx, step, bmax = PAPER_TABLE2[key]
+        assert abs(row["bare_idle_w"] - bare) < 1.5, (key, row)
+        assert abs(row["ctx_power_w"] - ctx) < 1.5, (key, row)
+        assert abs(row["context_overhead_w"] - step) < 2.0, (key, row)
+        assert abs(row["beta_w_per_gb"]) < bmax, (key, row)
+        assert dr.tost.equivalent, (key, "TOST must bound |beta|<0.1")
+        assert row["context_share_pct"] > 98.0, (key, row)
+        lines.append(
+            f"{key}: bare={row['bare_idle_w']} ctx={row['ctx_power_w']} "
+            f"step=+{row['context_overhead_w']}W beta={row['beta_w_per_gb']:+.4f} "
+            f"p={row['p_beta']:.3g} p_tost={row['p_tost']:.2g} "
+            f"range={row['power_range_w']}W share={row['context_share_pct']}%")
+        emit(f"table2.{key}.beta_w_per_gb", f"{row['beta_w_per_gb']:+.4f}")
+        emit(f"table2.{key}.dvfs_step_w", f"{row['context_overhead_w']}")
+    # A100's negative-slope confound (section 4.2): drift makes beta negative
+    dr_a100 = run_simulated_dose_response(A100, seed=42,
+                                          thermal_drift_w_per_hr=0.05)
+    assert dr_a100.regression.slope < 0, "A100 drift confound not negative"
+    emit("table2.a100.drift_confound_beta",
+         f"{dr_a100.regression.slope:+.4f}(p={dr_a100.regression.p_value:.3f})")
+    return " | ".join(lines)
+
+
+def bench_table3() -> str:
+    """Section 4.3 / Table 3: real-model validation -- a loaded HF model
+    idles within noise of a same-context reference on every arch."""
+    results = []
+    specs = [  # (profile, instance offset W, ref vram GB, model vram GB)
+        (H100, 0.0, 16.0, 14.9),        # torch.empty reference
+        (A100, 25.4, 0.5, 14.8),        # post-unload reference; 105 W node
+        (L40S, -4.8, 0.5, 14.8),
+    ]
+    for prof, off, ref_v, model_v in specs:
+        rd = SimulatedPowerReader(prof, seed=3, instance_offset_w=off)
+        def mean_at(v):
+            rd.set_state(context_active=True, vram_gb=v)
+            return float(np.mean([rd.sample(i * 30.0).power_w
+                                  for i in range(30)]))
+        m_model = mean_at(model_v)
+        m_ref = mean_at(ref_v)
+        delta = m_model - m_ref
+        assert abs(delta) < 0.5, (prof.name, delta)   # paper: <=0.47 W
+        results.append(f"{prof.name}: model={m_model:.2f}W "
+                       f"ref={m_ref:.2f}W delta={delta:+.2f}W")
+        emit(f"table3.{prof.name}.delta_w", f"{delta:+.3f}")
+    # cold-start profile (measured H100 trace, section 4.3)
+    tr = QWEN25_7B_H100_TRACE
+    emit("table3.coldstart.total_s", f"{tr.total_s:.1f}")
+    emit("table3.coldstart.mean_w", f"{tr.mean_power_w:.1f}")
+    assert 29.0 < tr.total_s < 30.5                   # paper: 29.7 s
+    return " | ".join(results)
+
+
+def bench_table4() -> str:
+    """Section 5 / Table 4: cold-start breakeven."""
+    paper = {"Qwen2.5-7B (measured)": 74.5,       # 1.2 min
+             "Standard PyTorch (70B)": 270.5,     # 4.5 min
+             "ServerlessLLM (70B)": 48.1,
+             "Run:ai Streamer (8B)": 20.0}
+    rows = timed("table4.breakeven", lambda: table4(H100))
+    lines = []
+    for r in rows:
+        want = paper[r.loader]
+        assert abs(r.t_star_s - want) / want < 0.02, (r.loader, r.t_star_s)
+        lines.append(f"{r.loader}: T*={format_t_star(r.t_star_s)} "
+                     f"(exact {format_t_star(r.t_star_exact_s)}) "
+                     f"lambda*={r.lambda_star_per_hr:.1f}/hr")
+        emit(f"table4.{r.loader}.t_star_s", f"{r.t_star_s:.1f}")
+    # cross-arch (section 5): A100 ~8.5 min, L40S ~3.4 min for PyTorch-70B
+    a = table4(A100)[1].t_star_s
+    l = table4(L40S)[1].t_star_s
+    assert abs(a - 513) < 6 and abs(l - 203) < 6, (a, l)
+    emit("table4.a100.pytorch70b_t_star_s", f"{a:.0f}")
+    emit("table4.l40s.pytorch70b_t_star_s", f"{l:.0f}")
+    return " | ".join(lines)
+
+
+def bench_table5() -> str:
+    """Section 6 / Table 5: industry impact 92-1745 GWh/yr."""
+    paper = {"low": 92.0, "base": 462.0, "high": 1745.0}
+    lines = []
+    for sc in TABLE5:
+        got = sc.energy_gwh_per_year
+        assert abs(got - paper[sc.name]) / paper[sc.name] < 0.01, (sc, got)
+        lines.append(f"{sc.name}={got:.0f}GWh/yr({sc.co2_kt_per_year:.0f}kT)")
+        emit(f"table5.{sc.name}.gwh_per_year", f"{got:.0f}")
+    return " ".join(lines)
+
+
+def bench_table6() -> str:
+    """Section 7 / Table 6: policy simulation, 5-seed averages."""
+    gens = {"steady": lambda s: traffic.poisson(5.0, seed=s),
+            "bursty": lambda s: traffic.bursty(seed=s),
+            "diurnal": lambda s: traffic.diurnal(seed=s)}
+    paper_sav = {"steady": 0.181, "bursty": 0.230, "diurnal": 0.082}
+    lines = []
+    for name, gen in gens.items():
+        sav_ttl, sav_be, colds = [], [], []
+        for s in range(5):
+            arr = gen(s)
+            res = compare_policies(
+                arr, [AlwaysOn(), FixedTTL(300),
+                      Breakeven(PYTORCH_70B, H100)], H100, PYTORCH_70B)
+            base = res[0]
+            assert abs(base.energy_wh - 2921) < 2, base.energy_wh
+            sav_ttl.append(res[1].savings_vs(base))
+            sav_be.append(res[2].savings_vs(base))
+            colds.append(res[2].cold_starts)
+        ttl, be = np.mean(sav_ttl), np.mean(sav_be)
+        # faithfulness: within 8 pp of the paper's savings for its trace
+        assert abs(be - paper_sav[name]) < 0.08, (name, be)
+        lines.append(f"{name}: ttl5={100*ttl:.1f}% breakeven={100*be:.1f}% "
+                     f"(paper {100*paper_sav[name]:.1f}%) "
+                     f"cold={np.mean(colds):.0f}")
+        emit(f"table6.{name}.breakeven_savings_pct", f"{100*be:.1f}")
+        emit(f"table6.{name}.paper_savings_pct",
+             f"{100*paper_sav[name]:.1f}")
+    return " | ".join(lines)
+
+
+def run_all() -> None:
+    print("== Phase 1 (sec 4.1):", bench_phase1())
+    print("== Table 2 (sec 4.2):", bench_table2())
+    print("== Table 3 (sec 4.3):", bench_table3())
+    print("== Table 4 (sec 5):  ", bench_table4())
+    print("== Table 5 (sec 6):  ", bench_table5())
+    print("== Table 6 (sec 7):  ", bench_table6())

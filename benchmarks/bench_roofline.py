@@ -1,0 +1,92 @@
+"""Roofline table from the dry-run result JSONs (launch/dryrun.py).
+
+Reads benchmarks/dryrun_results/*.json and renders the section-Roofline
+tables of EXPERIMENTS.md: per (arch x shape x mesh) the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, fits check, and the
+one-line "what would move the dominant term" nudge.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "dryrun_results"
+
+NUDGE = {
+    ("compute",): "cut redundant FLOPs (windowed/flash attention, leaner "
+                  "MoE dispatch, less remat)",
+    ("memory",): "shrink streamed state (weight/KV sharding, window ring "
+                 "buffers, quantized cache)",
+    ("collective",): "reshard to cut per-layer gathers (fewer TP hops, "
+                     "bf16 reduces, overlap with compute)",
+}
+
+
+def load_cells(tag: str = "baseline") -> List[Dict]:
+    cells = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("tag", "baseline") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def render_table(cells: List[Dict], mesh: str) -> str:
+    hdr = (f"| arch | shape | compute ms | memory ms (floor) | "
+           f"collective ms | dominant | useful-FLOP | roofline-frac | "
+           f"GiB/dev |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | -- | -- | -- | "
+                         f"skipped | -- | -- | -- |")
+            continue
+        if c["status"] != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR: "
+                         f"{c.get('error','')[:60]} | | | | | | |")
+            continue
+        gib = c["peak_device_bytes"] / 2 ** 30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']*1e3:.1f} | "
+            f"{c['memory_floor_s']*1e3:.1f} | {c['collective_s']*1e3:.1f} | "
+            f"{c['dominant_floor']} | {c['useful_flops_ratio']:.2f} | "
+            f"{c['roofline_fraction_floor']:.3f} | {gib:.1f} |")
+    return "\n".join(lines)
+
+
+def run_all() -> None:
+    cells = load_cells()
+    if not cells:
+        print("== Roofline: no dry-run results yet "
+              "(run python -m repro.launch.dryrun --all)")
+        return
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    errs = [c for c in cells if c["status"] not in ("ok", "skipped")]
+    print(f"== Roofline: {len(ok)} ok, {len(skipped)} skipped "
+          f"(documented), {len(errs)} errors")
+    for mesh in ("single", "multi"):
+        sub = [c for c in ok if c["mesh"] == mesh]
+        if not sub:
+            continue
+        print(f"-- mesh={mesh} ({len(sub)} cells)")
+        print(render_table(cells, mesh))
+        for c in sub:
+            emit(f"roofline.{c['arch']}.{c['shape']}.{mesh}.frac",
+                 f"{c['roofline_fraction_floor']:.4f}")
+    # summary: worst / best cells by roofline fraction (single-pod)
+    single = [c for c in ok if c["mesh"] == "single"]
+    if single:
+        worst = min(single, key=lambda c: c["roofline_fraction_floor"])
+        best = max(single, key=lambda c: c["roofline_fraction_floor"])
+        print(f"-- worst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} = {worst['roofline_fraction_floor']:.3f} "
+              f"({worst['dominant_floor']}-bound)")
+        print(f"-- best  roofline fraction: {best['arch']} x "
+              f"{best['shape']} = {best['roofline_fraction_floor']:.3f}")

@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + CSV rows (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timed(name: str, fn: Callable[[], Any], *, repeats: int = 1
+          ) -> Any:
+    """Run fn, record (name, us_per_call, derived-from-return)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    derived = out if isinstance(out, str) else ""
+    ROWS.append((name, us, derived))
+    return out
+
+
+def emit(name: str, derived: str, us: float = 0.0) -> None:
+    ROWS.append((name, us, derived))
+
+
+def print_csv() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in ROWS:
+        print(f"{name},{us:.1f},{derived}")

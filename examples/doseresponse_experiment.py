@@ -1,0 +1,33 @@
+"""Reproduce the paper's Phase-2 dose-response figure data (Fig. 1/3) and
+Table 2 on all three GPU architectures, printing the per-phase means the
+figures plot.
+
+Run:  PYTHONPATH=src python examples/doseresponse_experiment.py
+"""
+from repro.core import A100, H100, L40S
+from repro.core.doseresponse import run_simulated_dose_response, table2_row
+
+DRIFT = {"H100-80GB-SXM": 0.0, "A100-80GB-PCIe": 0.05, "L40S-48GB": 0.0}
+
+
+def main() -> None:
+    for prof in (H100, A100, L40S):
+        dr = run_simulated_dose_response(
+            prof, seed=42, thermal_drift_w_per_hr=DRIFT[prof.name])
+        row = table2_row(dr, prof)
+        print(f"=== {prof.name} ({prof.memory_tech}) ===")
+        print("  Fig-1 dose-response (vram_gb -> mean W +- sd):")
+        for ph in dr.phases:
+            tag = "ctx" if ph.context_active else "bare"
+            print(f"    {tag:4s} {ph.vram_gb:6.1f} GB : "
+                  f"{ph.mean_w:8.2f} +- {ph.std_w:.2f} W")
+        print(f"  Table-2 column: step=+{row['context_overhead_w']} W "
+              f"({row['context_pct_tdp']}% TDP), "
+              f"beta={row['beta_w_per_gb']:+.4f} W/GB "
+              f"[{row['beta_ci'][0]:+.4f},{row['beta_ci'][1]:+.4f}], "
+              f"p={row['p_beta']:.3f}, p_TOST={row['p_tost']:.2g}, "
+              f"context share {row['context_share_pct']}%")
+
+
+if __name__ == "__main__":
+    main()

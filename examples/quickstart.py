@@ -1,0 +1,52 @@
+"""Quickstart: the paper in 60 seconds of CPU time.
+
+  1. Measure a device's parking tax with the Phase-2 dose-response
+     protocol (simulated oracle carrying the paper's physics).
+  2. Derive the cold-start breakeven T* / critical rate lambda*.
+  3. Run the 24 h scheduler comparison on bursty traffic.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import H100, PYTORCH_70B
+from repro.core.breakeven import breakeven_seconds, critical_rate_per_hr, \
+    format_t_star
+from repro.core.doseresponse import run_simulated_dose_response
+from repro.core.scheduler import AdaptiveBreakeven, AlwaysOn, Breakeven, \
+    FixedTTL
+from repro.core.simulator import compare_policies
+from repro.core import traffic
+
+
+def main() -> None:
+    # -- 1. measure --------------------------------------------------------
+    dr = run_simulated_dose_response(H100, seed=0)
+    print(f"[measure] {dr.device}: bare {dr.bare_idle_w:.1f} W, "
+          f"context-idle {dr.ctx_idle_w:.1f} W "
+          f"-> parking tax {dr.dvfs_step_w:.1f} W")
+    print(f"[measure] VRAM slope beta = {dr.regression.slope:+.4f} W/GB "
+          f"(p={dr.regression.p_value:.2f}); TOST |beta|<0.1: "
+          f"{'PASS' if dr.tost.equivalent else 'FAIL'} "
+          f"-> context is {100*dr.context_share_of_tax:.1f}% of the tax")
+
+    # -- 2. decide ----------------------------------------------------------
+    t_star = breakeven_seconds(PYTORCH_70B, H100)
+    lam = critical_rate_per_hr(PYTORCH_70B, H100)
+    print(f"[breakeven] 70B/PyTorch loader: T* = {format_t_star(t_star)}, "
+          f"keep warm above {lam:.1f} req/hr")
+
+    # -- 3. schedule ---------------------------------------------------------
+    arr = traffic.bursty(seed=0)
+    res = compare_policies(
+        arr, [AlwaysOn(), FixedTTL(300), Breakeven(PYTORCH_70B, H100),
+              AdaptiveBreakeven(PYTORCH_70B, H100)], H100, PYTORCH_70B)
+    base = res[0]
+    print(f"[schedule] bursty day, {len(arr)} requests:")
+    for r in res:
+        print(f"  {r.policy:34s} {r.energy_wh:7.0f} Wh "
+              f"({100*r.savings_vs(base):+5.1f}%)  "
+              f"cold-starts {r.cold_starts:3d}  "
+              f"added latency {r.mean_added_latency_s:5.1f} s/req")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Assigned architecture configs (+ the paper's Qwen2.5-7B validation model).
+
+Each module exports CONFIG (the exact assigned full-scale config) and
+``reduced()`` (a structurally-identical small config for CPU smoke tests).
+``get_config(name)`` / ``ARCHS`` are the registry the launcher and dry-run
+consume (``--arch <id>``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.models.config import ArchConfig
+
+_MODULES = [
+    "whisper_base",
+    "deepseek_v2_236b",
+    "mixtral_8x22b",
+    "xlstm_125m",
+    "internvl2_26b",
+    "gemma3_1b",
+    "granite_20b",
+    "command_r_35b",
+    "minicpm3_4b",
+    "recurrentgemma_9b",
+    "qwen2_5_7b",          # the paper's section 4.3 validation model
+]
+
+ARCHS: List[str] = [m.replace("_", "-") for m in _MODULES]
+
+
+def _module(name: str):
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCHS}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return _module(name).reduced()

@@ -1,0 +1,24 @@
+"""The paper's contribution: parking-tax power model, measurement pipeline,
+breakeven model, and eviction scheduling (see DESIGN.md sections 1-2)."""
+from repro.core.power_model import (A100, H100, L40S, PROFILES, TPU_V5E,
+                                    DeviceProfile, get_profile)
+from repro.core.breakeven import (breakeven_seconds, critical_rate_per_hr,
+                                  table4)
+from repro.core.coldstart import (LoaderSpec, TABLE4_LOADERS,
+                                  QWEN25_7B_MEASURED, PYTORCH_70B,
+                                  SERVERLESSLLM_70B, RUNAI_STREAMER_8B,
+                                  loader_from_checkpoint)
+from repro.core.scheduler import (AdaptiveBreakeven, AlwaysOn, Breakeven,
+                                  Clairvoyant, ExactBreakeven, FixedTTL,
+                                  Policy)
+from repro.core.simulator import SimResult, compare_policies, simulate
+
+__all__ = [
+    "A100", "H100", "L40S", "TPU_V5E", "PROFILES", "DeviceProfile",
+    "get_profile", "breakeven_seconds", "critical_rate_per_hr", "table4",
+    "LoaderSpec", "TABLE4_LOADERS", "QWEN25_7B_MEASURED", "PYTORCH_70B",
+    "SERVERLESSLLM_70B", "RUNAI_STREAMER_8B", "loader_from_checkpoint",
+    "Policy", "AlwaysOn", "FixedTTL", "Breakeven", "ExactBreakeven",
+    "AdaptiveBreakeven", "Clairvoyant", "SimResult", "simulate",
+    "compare_policies",
+]

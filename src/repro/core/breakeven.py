@@ -1,0 +1,81 @@
+"""Cold-start energy breakeven model (paper section 5, Eqs. 12-13; Table 4).
+
+    T*      = P_load * t_load / P_park          (Eq. 12)
+    lambda* = P_park / (P_load * t_load)        (Eq. 13; keep warm iff
+                                                 Poisson rate > lambda*)
+
+``P_park`` is the architecture's DVFS step (49.9 W H100 / 26.3 W A100 /
+66.4 W L40S).  The paper uses the FULL loading power in Eq. 12; the
+energy-exact accounting would charge only the loading power *above bare
+idle* (during a cold start the chip would otherwise sit at P_base).  We
+implement both; ``paper_convention=True`` is the faithful default and the
+exact variant is reported under beyond-paper results (it shortens T* by
+~25% and strictly improves the eviction policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.coldstart import LoaderSpec, TABLE4_LOADERS
+from repro.core.power_model import DeviceProfile
+
+
+def breakeven_seconds(
+    loader: LoaderSpec,
+    profile: DeviceProfile,
+    *,
+    paper_convention: bool = True,
+) -> float:
+    """Idle duration beyond which evicting beats keeping warm (Eq. 12)."""
+    p_park = profile.dvfs_step_w
+    if p_park <= 0:
+        return float("inf")
+    p_load = loader.p_load_w
+    if not paper_convention:
+        # energy-exact: only the above-bare-idle part of loading is a cost
+        p_load = max(loader.p_load_w - profile.p_base_w, 0.0)
+    return p_load * loader.t_load_s / p_park
+
+
+def critical_rate_per_hr(
+    loader: LoaderSpec,
+    profile: DeviceProfile,
+    *,
+    paper_convention: bool = True,
+) -> float:
+    """lambda* (Eq. 13): keep warm iff requests/hour exceed this."""
+    t_star = breakeven_seconds(loader, profile,
+                               paper_convention=paper_convention)
+    return 3600.0 / t_star if t_star > 0 else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakevenRow:
+    loader: str
+    p_load_w: float
+    t_load_s: float
+    t_star_s: float
+    t_star_exact_s: float
+    lambda_star_per_hr: float
+
+
+def table4(profile: DeviceProfile,
+           loaders: Optional[List[LoaderSpec]] = None) -> List[BreakevenRow]:
+    """Paper Table 4 (plus the exact-convention column and lambda*)."""
+    rows = []
+    for ld in (loaders or TABLE4_LOADERS):
+        rows.append(BreakevenRow(
+            loader=ld.name, p_load_w=ld.p_load_w, t_load_s=ld.t_load_s,
+            t_star_s=breakeven_seconds(ld, profile),
+            t_star_exact_s=breakeven_seconds(ld, profile,
+                                             paper_convention=False),
+            lambda_star_per_hr=critical_rate_per_hr(ld, profile),
+        ))
+    return rows
+
+
+def format_t_star(seconds: float) -> str:
+    if seconds < 60:
+        return f"{seconds:.0f} s"
+    return f"{seconds / 60.0:.1f} min"

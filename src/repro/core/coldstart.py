@@ -1,0 +1,111 @@
+"""Cold-start power/latency profiles (paper sections 4.3, 5, Table 4).
+
+A cold start is bursty, not flat (paper's measured H100 trace for
+Qwen2.5-7B, 29.7 s total):
+
+    deserialize (CPU-side) : ~22 s near bare idle (~70.8 W)
+    weight transfer burst  : ~3 s peaking at 124.1 W
+    settle                 : context-active idle (~121 W)
+
+``LoaderSpec`` captures (P_load, t_load) pairs -- the two numbers the
+breakeven model consumes.  Table-4 loaders are shipped verbatim; per-
+architecture load times for the serving framework are derived from
+checkpoint bytes / storage bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.power_model import DeviceProfile
+
+GB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class LoaderSpec:
+    """(mean loading power, loading duration) for one loading method."""
+    name: str
+    p_load_w: float
+    t_load_s: float
+    measured: bool = False       # True only for the paper's own measurement
+
+    @property
+    def load_energy_j(self) -> float:
+        return self.p_load_w * self.t_load_s
+
+
+# Paper Table 4 rows (H100 context).  "Measured in this work" vs estimates
+# from published loader benchmarks.
+QWEN25_7B_MEASURED = LoaderSpec("Qwen2.5-7B (measured)", 124.0, 30.0, measured=True)
+PYTORCH_70B = LoaderSpec("Standard PyTorch (70B)", 300.0, 45.0)
+SERVERLESSLLM_70B = LoaderSpec("ServerlessLLM (70B)", 300.0, 8.0)
+RUNAI_STREAMER_8B = LoaderSpec("Run:ai Streamer (8B)", 200.0, 5.0)
+
+TABLE4_LOADERS: List[LoaderSpec] = [
+    QWEN25_7B_MEASURED, PYTORCH_70B, SERVERLESSLLM_70B, RUNAI_STREAMER_8B,
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ColdStartPhases:
+    """Piecewise-constant cold-start power trace (3 phases)."""
+    deserialize_s: float
+    deserialize_w: float
+    transfer_s: float
+    transfer_peak_w: float
+    settle_w: float
+
+    @property
+    def total_s(self) -> float:
+        return self.deserialize_s + self.transfer_s
+
+    @property
+    def mean_power_w(self) -> float:
+        e = (self.deserialize_s * self.deserialize_w
+             + self.transfer_s * self.transfer_peak_w)
+        return e / self.total_s
+
+    def trace(self, hz: float = 1.0) -> Tuple[np.ndarray, np.ndarray]:
+        """1-Hz style trace like the paper's measured H100 profile."""
+        n = int(np.ceil(self.total_s * hz))
+        t = np.arange(n) / hz
+        p = np.where(t < self.deserialize_s, self.deserialize_w,
+                     self.transfer_peak_w)
+        return t, p
+
+
+# The paper's measured H100 Qwen2.5-7B profile (section 4.3).
+QWEN25_7B_H100_TRACE = ColdStartPhases(
+    deserialize_s=22.0, deserialize_w=70.8,
+    transfer_s=7.7, transfer_peak_w=124.1, settle_w=121.0,
+)
+
+
+def loader_from_checkpoint(
+    name: str,
+    checkpoint_bytes: int,
+    profile: DeviceProfile,
+    *,
+    storage_bw_gbps: float = 1.0,      # effective deserialize path, GB/s
+    hbm_ingest_gbps: Optional[float] = None,
+    deserialize_overhead: float = 1.8,  # CPU-side unpickle/convert factor
+) -> LoaderSpec:
+    """Derive a per-architecture LoaderSpec from checkpoint size.
+
+    Matches the structure of the measured trace: an I/O/deserialize phase
+    at ~bare idle dominated by storage, then a device-ingest burst.
+    Calibrated on the paper's measured Qwen2.5-7B H100 profile (14.9 GB ->
+    22 s deserialize + ~3 s burst peaking ~124 W = 29.7 s total).
+    """
+    gbs = checkpoint_bytes / GB
+    ingest = hbm_ingest_gbps or max(profile.mem_bw_gbps * 0.0015, 1.0)
+    t_deser = gbs / storage_bw_gbps * deserialize_overhead
+    t_xfer = gbs / ingest
+    t_total = t_deser + t_xfer
+    # mean power: deserialize near bare idle, transfer at modest burst
+    burst_w = profile.idle_power_w(True) + 0.004 * profile.tdp_w
+    p_mean = (t_deser * (profile.p_base_w * 0.99) + t_xfer * burst_w) / t_total
+    return LoaderSpec(name=name, p_load_w=float(p_mean), t_load_s=float(t_total))

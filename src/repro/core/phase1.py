@@ -1,0 +1,88 @@
+"""Phase-1 production telemetry analysis (paper sections 3.1, 4.1).
+
+Reproduces the pipeline: filter to 0%-utilization samples, split the fleet by
+SM-clock bimodality into bare-idle vs context-active states, quantify the
+context effect (Welch t + Cohen's d), run the pooled VRAM regression across
+context-active GPUs, and the per-device slope bound of section 8 ("large
+intercept variation with zero slope variation").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import stats
+from repro.core.telemetry import FleetDataset
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase1Result:
+    n_raw: int
+    n_idle: int
+    n_eff_low: float
+    n_eff_high: float
+    bare_mean_w: float
+    bare_std_w: float
+    ctx_mean_w: float
+    ctx_std_w: float
+    context_effect_w: float
+    cohens_d: float
+    p_value: float
+    pooled_slope_w_per_gb: float
+    pooled_slope_p: float
+    pooled_r2: float
+    per_gpu_slopes: Dict[int, stats.OLSResult]
+    intercept_range_w: float
+
+
+def split_states(ds: FleetDataset) -> Dict[str, np.ndarray]:
+    """Bimodal state split by SM clock (345 MHz bare vs 1980 MHz boost)."""
+    thresh = 0.5 * (ds.sm_clock_mhz.min() + ds.sm_clock_mhz.max())
+    active = ds.sm_clock_mhz > thresh
+    return {"bare": ds.power_w[~active], "ctx": ds.power_w[active],
+            "active_mask": active}
+
+
+def analyze_fleet(ds: FleetDataset, *, tau_samples_low: float = 6.0,
+                  tau_samples_high: float = 10.0) -> Phase1Result:
+    idle = ds.idle_only()
+    states = split_states(idle)
+    two = stats.welch_cohens(states["bare"], states["ctx"])
+
+    active = states["active_mask"]
+    # pooled regression across context-active samples (slope = 0.013 W/GB,
+    # R2 = 0.001 in the paper -- swamped by the ~23 W node-level variation)
+    reg = stats.ols(idle.vram_gb[active], idle.power_w[active])
+
+    # per-device slope bound (paper section 8): each GPU parks one VRAM level in
+    # production, so a per-device slope needs within-device VRAM variation;
+    # with sticky allocations we instead bound the *between-device* slope
+    # via GPU-level (vram, mean power) pairs within the active state.
+    per_gpu: Dict[int, stats.OLSResult] = {}
+    gids = np.unique(idle.gpu_id[active])
+    means, vrams = [], []
+    for g in gids:
+        m = active & (idle.gpu_id == g)
+        means.append(float(idle.power_w[m].mean()))
+        vrams.append(float(idle.vram_gb[m].mean()))
+        if np.unique(idle.vram_gb[m]).size >= 3:
+            per_gpu[int(g)] = stats.ols(idle.vram_gb[m], idle.power_w[m])
+    device_reg = stats.ols(np.array(vrams), np.array(means)) \
+        if len(means) >= 3 else reg
+
+    n_idle = len(idle)
+    return Phase1Result(
+        n_raw=len(ds),
+        n_idle=n_idle,
+        n_eff_low=stats.effective_sample_size(n_idle, tau_samples_high),
+        n_eff_high=stats.effective_sample_size(n_idle, tau_samples_low),
+        bare_mean_w=two.mean_a, bare_std_w=two.std_a,
+        ctx_mean_w=two.mean_b, ctx_std_w=two.std_b,
+        context_effect_w=two.diff, cohens_d=two.cohens_d, p_value=two.p_value,
+        pooled_slope_w_per_gb=reg.slope, pooled_slope_p=reg.p_value,
+        pooled_r2=reg.r2,
+        per_gpu_slopes=per_gpu,
+        intercept_range_w=float(np.ptp(np.array(means))) if means else 0.0,
+    )

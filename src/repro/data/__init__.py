@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, DataCursor
+
+__all__ = ["SyntheticLMDataset", "DataCursor"]

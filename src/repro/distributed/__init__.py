@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (LONG_SERVE_RULES, SERVE_RULES,
+                                        TRAIN_RULES, partition_spec,
+                                        shardings_for_specs,
+                                        shardings_for_tree)
+
+__all__ = ["TRAIN_RULES", "SERVE_RULES", "LONG_SERVE_RULES",
+           "partition_spec", "shardings_for_specs", "shardings_for_tree"]

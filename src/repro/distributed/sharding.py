@@ -1,0 +1,169 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md section 5).
+
+A *rule set* maps each logical axis name (models/params.py specs) to an
+ordered list of candidate mesh-axis tuples.  ``partition_spec`` picks, per
+tensor dimension, the first candidate whose mesh axes (a) all exist in the
+mesh, (b) evenly divide the dimension, and (c) are not already used by
+another dimension of the same tensor.  Unsatisfiable dims replicate.
+
+This shape-aware fallback is what lets one rule set serve all ten
+architectures: whisper's 8 heads replicate on a 16-way model axis while
+granite's 48 heads shard; gemma's kv_heads=1 replicates everywhere; the
+batch=1 long-context cells fall through to sequence sharding.
+
+Rule sets:
+  * TRAIN_RULES: FSDP on the "embed" axis over data (ZeRO-style weight
+    gathering by GSPMD) + tensor/expert parallel over "model"; batch over
+    (pod, data).
+  * SERVE_RULES: weights replicated over data (no optimizer state, decode
+    all-gathers would dominate), TP/EP over "model"; KV-cache length over
+    "model" (kv_heads are rarely divisible: 1-8 on most archs).
+  * LONG_SERVE_RULES: batch=1 long-context decode -- cache length sharded
+    over (data, model) (sequence parallelism over the cache).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.params import ParamSpec, is_spec
+
+Tree = Any
+Candidate = Tuple[str, ...]
+RuleSet = Dict[str, List[Candidate]]
+
+TRAIN_RULES: RuleSet = {
+    "batch": [("pod", "data"), ("data",)],
+    "embed": [("data",)],                 # FSDP / ZeRO weight sharding
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "ffn": [("model",)],
+    "experts": [("model",)],
+    "vocab": [("model",)],
+    "lora": [],
+    "layers": [],
+    "hdim": [], "hdim2": [], "ffn2": [], "conv": [],
+    "kv_len": [],
+    # Megatron-style sequence parallelism for residual activations: the
+    # block-boundary hint ("batch","seq",None) shards the carry over
+    # "model", so lax.scan's saved-for-backward stack is 1/16th the size
+    # (the 236B archs do not fit otherwise); GSPMD inserts the
+    # all-gather / reduce-scatter pair around attention/FFN.
+    "seq": [("model",)],
+}
+
+SERVE_RULES: RuleSet = {
+    "batch": [("pod", "data"), ("data",)],
+    "embed": [],                          # replicate over data for decode
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "ffn": [("model",)],
+    "experts": [("model",)],
+    "vocab": [("model",)],
+    "lora": [],
+    "layers": [],
+    # hdim shards W_k/W_v over "model" when kv_heads (1-8 on most archs)
+    # cannot -- caches are unaffected (their kv_len takes "model" first)
+    "hdim": [("model",)], "hdim2": [], "ffn2": [], "conv": [],
+    "kv_len": [("model",)],               # cache length over model axis
+    "seq": [],
+}
+
+LONG_SERVE_RULES: RuleSet = dict(
+    SERVE_RULES,
+    kv_len=[("pod", "data", "model"), ("data", "model"), ("model",)],
+)
+
+# >= ~100B-param archs cannot replicate weights across the data axis at
+# serve time (deepseek-v2 params/16 = 29.5 GB > 16 GB HBM): shard the
+# "embed" dim over data too (weights all-gathered per layer by GSPMD --
+# the memory-for-collectives trade the roofline table quantifies).
+SERVE_BIG_RULES: RuleSet = dict(SERVE_RULES, embed=[("data",)])
+LONG_SERVE_BIG_RULES: RuleSet = dict(LONG_SERVE_RULES, embed=[("data",)])
+
+
+def partition_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   rules: RuleSet, mesh: Mesh) -> PartitionSpec:
+    taken: set = set()
+    parts: List[Optional[Any]] = []
+    for dim, ax in zip(shape, axes):
+        chosen = None
+        for cand in (rules.get(ax) or []) if ax else []:
+            if not all(a in mesh.axis_names for a in cand):
+                continue
+            size = math.prod(mesh.shape[a] for a in cand)
+            if size <= 1 or dim % size != 0:
+                continue
+            if any(a in taken for a in cand):
+                continue
+            chosen = cand
+            taken.update(cand)
+            break
+        if chosen is None:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(chosen)
+    return PartitionSpec(*parts)
+
+
+def shardings_for_specs(spec_tree: Tree, rules: RuleSet, mesh: Mesh) -> Tree:
+    """NamedSharding tree from a ParamSpec tree (params, caches)."""
+    def one(s: ParamSpec) -> NamedSharding:
+        return NamedSharding(mesh, partition_spec(s.axes, s.shape, rules,
+                                                  mesh))
+    return jax.tree_util.tree_map(one, spec_tree, is_leaf=is_spec)
+
+
+def shardings_for_tree(axes_tree: Tree, abstract_tree: Tree, rules: RuleSet,
+                       mesh: Mesh) -> Tree:
+    """NamedSharding tree for ad-hoc pytrees: ``axes_tree`` mirrors
+    ``abstract_tree`` with tuples of logical axis names as leaves."""
+    def one(axes, arr):
+        return NamedSharding(mesh, partition_spec(axes, arr.shape, rules,
+                                                  mesh))
+    return jax.tree_util.tree_map(one, axes_tree, abstract_tree,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints.
+#
+# FSDP-style weight sharding ("embed" -> data) and batch sharding share the
+# "data" mesh axis.  Inside an einsum that contracts a weight's FSDP dim
+# against a batch-sharded activation, GSPMD must gather one side -- and left
+# to itself it sometimes gathers the *activation* (observed: gemma3 train
+# scores materialized with a global 256 batch, 64 GiB/buffer).  Anchoring
+# activations with with_sharding_constraint at block boundaries forces the
+# standard ZeRO resolution: weights are all-gathered, activations stay
+# sharded.  The hints are no-ops outside a jit traced under
+# ``activation_sharding`` (unit tests, reduced smokes).
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: RuleSet):
+    tok = _ACT_CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def shard_hint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain `x`'s sharding per the active rule set (no-op if none)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    ps = partition_spec(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))

@@ -1,0 +1,86 @@
+"""GQA decode attention (one token vs. a long KV cache) as a Pallas kernel.
+
+TPU adaptation of flash-decode: on GPUs the KV split is parallelized
+across thread blocks with a separate combine kernel; TPU grid steps are
+sequential per core, so the kernel keeps a running online softmax over KV
+blocks in VMEM scratch -- same arithmetic, no combine pass.  The cache
+frontier (`length`) masks out unwritten entries; scalar prefetch carries
+it so block iteration can stop early at ceil(length / BK).
+
+q: [B, H, D]; k,v: [B, Hkv, T, D]; length: [B] valid entries per row.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, bk: int,
+                   seq_k: int, scale: float):
+    bi = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # [G, D]
+    gdim, d = q.shape
+    length = len_ref[bi]
+
+    m = jnp.full((gdim,), NEG_INF, jnp.float32)
+    l = jnp.zeros((gdim,), jnp.float32)
+    acc = jnp.zeros((gdim, d), jnp.float32)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(ki * bk, bk)].astype(jnp.float32)  # [BK, D]
+        v = v_ref[0, 0, pl.ds(ki * bk, bk)].astype(jnp.float32)
+        s = q @ k.T                                         # [G, BK]
+        k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
+        s = jnp.where((k_pos < length)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    n_blocks = (length + bk - 1) // bk                      # early stop
+    n_blocks = jnp.minimum(n_blocks, seq_k // bk)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m, l, acc))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray, *, bk: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Returns [B,H,D].  `length` broadcasts to [B] (valid cache rows)."""
+    b, h, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = min(bk, t)
+    assert t % bk == 0
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    scale = 1.0 / math.sqrt(d)
+
+    # group query heads by kv head: [B, Hkv, G, D]
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv)
+    kernel = functools.partial(_decode_kernel, bk=bk, seq_k=t, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),      # length: scalar-ish
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(length, qg, k, v)
+    return out.reshape(b, h, d)

@@ -1,0 +1,110 @@
+"""Flash attention (prefill) as a Pallas TPU kernel.
+
+TPU adaptation of the flash algorithm (DESIGN.md section 3): the grid is
+(batch, q_heads, S/BQ); each program streams K/V blocks of BK rows from
+HBM through VMEM, keeping the online-softmax running max/denominator and
+the output accumulator in fp32 VMEM scratch.  Block sizes are multiples
+of 128 so the MXU sees aligned matmuls; GQA is handled in the BlockSpec
+index maps (q head h reads kv head h // group -- no jnp.repeat
+materialization).  Sliding windows skip fully-masked K blocks via
+jax.lax.cond on block bounds.
+
+Forward-only: the serving hot path (prefill/decode) is where the paper's
+framework spends its compute; training uses the XLA/chunked path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  seq_k: int, causal: bool, window: Optional[int],
+                  scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [BQ, D]
+    d = q.shape[-1]
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, d), jnp.float32)
+
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)        # absolute q rows
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(ki * bk, bk)].astype(jnp.float32)   # [BK, D]
+        v = v_ref[0, 0, pl.ds(ki * bk, bk)].astype(jnp.float32)
+        s = q @ k.T                                       # [BQ, BK]
+        k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # block range: causal/window lets us skip fully-masked K blocks
+    hi = seq_k // bk
+    if causal:
+        hi_dyn = (qi * bq + bq + bk - 1) // bk
+        hi_dyn = jnp.minimum(hi_dyn, hi)
+    else:
+        hi_dyn = hi
+    if window is not None:
+        lo_dyn = jnp.maximum((qi * bq - window) // bk, 0)
+    else:
+        lo_dyn = 0
+    m, l, acc = jax.lax.fori_loop(lo_dyn, hi_dyn, body, (m, l, acc))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D].  Returns [B,H,S,D].
+
+    interpret=True runs the kernel body in Python on CPU (this container);
+    on TPU pass interpret=False for the compiled Mosaic kernel.
+    """
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, "seq lens must divide block sizes"
+    scale = 1.0 / math.sqrt(d)
+
+    grid = (b, h, s // bq)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, seq_k=t,
+                               causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+One switch (``use_pallas``) selects the kernel or the pure-jnp reference;
+the serving engine and benchmarks call through here so swapping in the
+TPU kernels is a one-line config change.  On this CPU container kernels
+run with interpret=True (Python-executed kernel bodies, same arithmetic);
+on TPU set REPRO_PALLAS_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.flash_attention import flash_attention as _flash_pl
+from repro.kernels.rglru_scan import rglru_scan as _rglru_pl
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    use_pallas: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return _flash_pl(q, k, v, causal=causal, window=window,
+                         interpret=INTERPRET)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k, v, length, *, use_pallas: bool = True
+                     ) -> jnp.ndarray:
+    if use_pallas:
+        return _decode_pl(q, k, v, length, interpret=INTERPRET)
+    return ref.decode_attention_ref(q, k, v, length)
+
+
+def rglru_scan(a, b, h0, *, use_pallas: bool = True) -> jnp.ndarray:
+    if use_pallas:
+        return _rglru_pl(a, b, h0, interpret=INTERPRET)
+    return ref.rglru_scan_ref(a, b, h0)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the semantics the kernels must match; tests sweep shapes/dtypes
+and assert against these.  They are intentionally simple -- full softmax,
+full materialization -- and correct.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B,H,S,D]; k,v: [B,Hkv,T,D] with H a multiple of Hkv.
+    Positions are 0..S-1 / 0..T-1 (prefill semantics, S == T)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= qi - ki < window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, vv.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         length: jnp.ndarray | int) -> jnp.ndarray:
+    """Single-token GQA decode.  q: [B,H,D]; k,v: [B,Hkv,T,D]; `length` =
+    number of valid cache entries (attend to positions < length)."""
+    b, h, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+    valid = jnp.arange(t)[None, None, :] < jnp.asarray(length).reshape(-1, 1, 1)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", w, vv.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+    a, bx: [B,S,W] fp32; h0: [B,W] or None.  Returns h: [B,S,W]."""
+    a = a.astype(jnp.float32)
+    bx = bx.astype(jnp.float32)
+    if h0 is not None:
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h

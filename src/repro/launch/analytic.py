@@ -1,0 +1,107 @@
+"""Analytic HBM-traffic floor per (arch x shape x mesh) cell.
+
+WHY: the CPU dry-run backend lowers every bf16 dot as convert-to-f32 +
+f32 dot, and hoists loop-invariant converts of the whole stacked weight /
+KV-cache tensors out of the scan.  ``cost_analysis()['bytes accessed']``
+therefore reflects CPU lowering (observed ~20x inflation on decode
+cells), not TPU behavior where bf16 feeds the MXU natively.  FLOP counts
+are dtype-independent (trustworthy) and collective shapes keep their
+stated dtypes (trustworthy); bytes are the one term that needs an
+analytic model.
+
+The floor counts, per device, the traffic a TPU implementation cannot
+avoid (weights streamed once per pass, KV cache read, optimizer state
+read+written, remat carries saved+reloaded, logits materialized).  It
+excludes intra-layer activation traffic that a fused implementation keeps
+in VMEM -- so it is a lower bound, labeled as such in EXPERIMENTS.md.
+Both the measured-HLO bytes and this floor are recorded per cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import RuleSet, partition_spec
+from repro.launch import steps as steps_lib
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec, is_spec
+
+Tree = Any
+
+
+def _sharded_bytes(spec_tree: Tree, rules: RuleSet, mesh: Mesh) -> int:
+    """Exact per-device bytes of a ParamSpec tree under the rule set."""
+    total = 0
+    for s in jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec):
+        ps = partition_spec(s.axes, s.shape, rules, mesh)
+        shards = 1
+        for entry in ps:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        n = math.prod(s.shape) // shards
+        total += n * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def analytic_bytes_per_device(cfg: ArchConfig, shape: "steps_lib.ShapeSpec",
+                              mesh: Mesh, *, remat: str = "full",
+                              flags=None) -> Dict[str, float]:
+    rules = steps_lib.rules_for(shape, cfg)
+    specs = steps_lib.input_specs(cfg, shape, flags)
+    dsize = mesh.size
+
+    if shape.kind == "train":
+        p_bytes = _sharded_bytes(specs["state"]["params"], rules, mesh)
+        m_bytes = _sharded_bytes(specs["state"]["mu"], rules, mesh) \
+            + _sharded_bytes(specs["state"]["nu"], rules, mesh)
+        # local tokens: batch and seq sharding per rules
+        tok_local = shape.global_batch * shape.seq_len
+        bspec = partition_spec(("batch", "seq"),
+                               (shape.global_batch, shape.seq_len), rules,
+                               mesh)
+        for entry in bspec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                tok_local //= mesh.shape[a]
+        act = jnp.dtype(cfg.compute_dtype).itemsize
+        # passes: fwd reads params, bwd reads params; full remat re-reads
+        passes = 3 if remat != "none" else 2
+        weights = p_bytes * passes
+        grads = p_bytes                                  # write grads
+        opt = m_bytes * 2 + p_bytes                      # rw moments, write p
+        carries = tok_local * cfg.d_model * act * cfg.n_layers * 2
+        vocab_local = cfg.vocab_size
+        vspec = partition_spec(("vocab",), (cfg.vocab_size,), rules, mesh)
+        if vspec[0] is not None:
+            axes = vspec[0] if isinstance(vspec[0], tuple) else (vspec[0],)
+            for a in axes:
+                vocab_local //= mesh.shape[a]
+        logits = tok_local * vocab_local * 4 * 2         # fp32 rw
+        total = weights + grads + opt + carries + logits
+        return {"params": p_bytes, "optimizer": m_bytes, "total": total,
+                "weights_traffic": weights, "carries": carries,
+                "logits": logits}
+
+    p_bytes = _sharded_bytes(specs["params"], rules, mesh)
+    c_bytes = _sharded_bytes(specs["caches"], rules, mesh)
+    if shape.kind == "decode":
+        # one token: stream weights once, read the whole cache, tiny writes
+        total = p_bytes + c_bytes
+        return {"params": p_bytes, "cache": c_bytes, "total": total}
+    # prefill: stream weights, write cache once, activation rw per layer
+    tok_local = shape.global_batch * shape.seq_len // dsize * \
+        max(mesh.shape.get("model", 1), 1)   # batch over data(,pod) only
+    act = jnp.dtype(cfg.compute_dtype).itemsize
+    acts = tok_local * cfg.d_model * act * cfg.n_layers * 2
+    total = p_bytes + c_bytes + acts
+    return {"params": p_bytes, "cache": c_bytes, "acts": acts,
+            "total": total}

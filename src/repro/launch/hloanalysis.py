@@ -1,0 +1,242 @@
+"""Roofline-term extraction from a compiled SPMD module (DESIGN.md sec. 6).
+
+Terms per the assignment:
+
+    compute    = HLO_FLOPs      / (chips * 197 TFLOP/s)
+    memory     = HLO_bytes      / (chips * 819 GB/s)
+    collective = coll_bytes     / (chips * 50 GB/s)
+
+``compiled.cost_analysis()`` reports flops / bytes-accessed of the
+*per-device* partitioned module, so global = per-device * chips and the
+chips factor cancels: each term is simply per-device quantity / per-chip
+rate.  Collective bytes are not in cost_analysis; we parse the compiled
+HLO text, build a %name -> result-bytes table, and sum *operand* sizes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (operand convention per the assignment; async
+``*-done`` halves are skipped to avoid double counting).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e-class constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per chip (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] literal in `text` (tuples too)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of collective ops in (per-device) HLO text."""
+    # pass 1: result sizes of every named instruction
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type(s) = everything before the op name token
+        # e.g.  "f32[32,64]{1,0} all-reduce(%dot.1), channel_id=..."
+        op_pos = rhs.find("(")
+        head = rhs[:op_pos] if op_pos > 0 else rhs
+        sizes[name] = _shape_bytes(head)
+
+    bytes_by: Dict[str, int] = {op: 0 for op in _COLLECTIVE_OPS}
+    count_by: Dict[str, int] = {op: 0 for op in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        for op in _COLLECTIVE_OPS:
+            # match "  all-reduce(" / "all-reduce-start(" but not "-done("
+            hit = re.search(rf"\b{op}(-start)?\(", rhs)
+            if not hit:
+                continue
+            if f"{op}-done" in rhs:
+                continue
+            # operands: %refs inside the call parens
+            inner = rhs[rhs.find("(") + 1:]
+            refs = re.findall(r"%[\w.\-]+", inner)
+            if refs:
+                b = sum(sizes.get(r, 0) for r in refs)
+            else:
+                b = _shape_bytes(rhs[:rhs.find(op)])
+            bytes_by[op] += b
+            count_by[op] += 1
+            break
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_detail: Dict[str, int]
+    collective_counts: Dict[str, int]
+    # memory_analysis
+    argument_bytes: int
+    output_bytes: int
+    temp_bytes: int
+    alias_bytes: int
+    model_flops_global: float           # 6 N_active D (or 2 N_active D)
+    tag: str = "baseline"
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time lower bound (no overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global) -- remat/dispatch waste meter."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful compute time / roofline-bound step
+        time, i.e. (MODEL_FLOPS/(chips*peak)) / max(terms)."""
+        useful_s = self.model_flops_global / (self.n_devices * PEAK_FLOPS)
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    @property
+    def peak_device_bytes(self) -> int:
+        return self.argument_bytes + self.output_bytes + self.temp_bytes \
+            - self.alias_bytes
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for k in ("compute_s", "memory_s", "collective_s", "dominant",
+                  "bound_s", "useful_flops_ratio", "roofline_fraction",
+                  "peak_device_bytes"):
+            d[k] = getattr(self, k)
+        return d
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_devices: int, model_flops_global: float,
+                     tag: str = "baseline",
+                     compiled_unroll2=None,
+                     scan_repeats: int = 1) -> RooflineReport:
+    """Build a RooflineReport from compiled artifacts.
+
+    XLA's HloCostAnalysis visits a while (lax.scan) body ONCE -- it does
+    not multiply by trip count -- so flops / bytes / in-loop collective
+    counts of a scanned model are undercounted by ~the layer count.  When
+    ``compiled_unroll2`` (same cell lowered with scan unroll=2) is given,
+    we use two-point extrapolation: unroll=2 duplicates the body once, so
+
+        body_cost  = cost(u2) - cost(u1)
+        true_cost  = cost(u1) + (R - 1) * body_cost
+
+    with R = scan_repeats.  Costs OUTSIDE the loop (e.g. the gradient
+    all-reduce over stacked layer params) cancel in the difference and are
+    correctly not scaled.  Length-1 scan groups never unroll (see
+    models/model.py), so their single execution stays in the constant.
+    """
+    def metrics(c):
+        ca = c.cost_analysis() or {}
+        coll = parse_collectives(c.as_text())
+        return (float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                coll)
+
+    f1, b1, coll1 = metrics(compiled)
+    if compiled_unroll2 is not None and scan_repeats > 1:
+        f2, b2, coll2 = metrics(compiled_unroll2)
+        r = scan_repeats
+        flops = f1 + (r - 1) * max(f2 - f1, 0.0)
+        bts = b1 + (r - 1) * max(b2 - b1, 0.0)
+        coll_bytes = {
+            op: coll1.bytes_by_op[op] + (r - 1) * max(
+                coll2.bytes_by_op[op] - coll1.bytes_by_op[op], 0)
+            for op in coll1.bytes_by_op}
+        coll_counts = {
+            op: coll1.count_by_op[op] + (r - 1) * max(
+                coll2.count_by_op[op] - coll1.count_by_op[op], 0)
+            for op in coll1.count_by_op}
+        coll_total = sum(coll_bytes.values())
+    else:
+        flops, bts = f1, b1
+        coll_bytes, coll_counts = coll1.bytes_by_op, coll1.count_by_op
+        coll_total = coll1.total_bytes
+
+    ma = compiled.memory_analysis()
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=flops,
+        bytes_per_device=bts,
+        collective_bytes_per_device=float(coll_total),
+        collective_detail=coll_bytes,
+        collective_counts=coll_counts,
+        argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+        alias_bytes=int(getattr(ma, "alias_size_in_bytes", 0)),
+        model_flops_global=model_flops_global,
+        tag=tag,
+    )

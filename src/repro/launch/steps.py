@@ -1,0 +1,270 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (tokens/labels/caches/frontend stubs) --
+shardable, zero-allocation -- plus the matching logical-axes trees the
+sharding rules consume.  ``make_*_step`` return the pure functions that
+jit/lower against those specs; the dry-run, the roofline benchmarks and
+the real launchers (train.py / serve.py) all go through here so the
+lowered computation is identical everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import (LONG_SERVE_BIG_RULES,
+                                        LONG_SERVE_RULES, SERVE_BIG_RULES,
+                                        SERVE_RULES, TRAIN_RULES, RuleSet,
+                                        activation_sharding, partition_spec,
+                                        shardings_for_specs)
+from repro.models.config import ArchConfig
+from repro.models.model import (RunFlags, build_cache_specs,
+                                build_param_specs, decode_step, prefill,
+                                train_loss)
+from repro.models.params import ParamSpec, abstract, is_spec, spec
+from repro.training.compression import compress_grads
+from repro.training.optimizer import AdamWConfig, adamw_init_specs, \
+    adamw_update
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) -- DESIGN.md section 4 skip rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: O(seq) KV per layer at "
+                       "524k is architecturally unbounded; skipped per "
+                       "assignment (DESIGN.md section 4)")
+    return True, ""
+
+
+def rules_for(shape: ShapeSpec, cfg: Optional[ArchConfig] = None
+              ) -> RuleSet:
+    if shape.kind == "train":
+        return TRAIN_RULES
+    big = cfg is not None and cfg.param_count() * 2 / 16 > 12e9
+    if shape.global_batch == 1:
+        return LONG_SERVE_BIG_RULES if big else LONG_SERVE_RULES
+    return SERVE_BIG_RULES if big else SERVE_RULES
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct) + logical axes, per shape kind
+# ---------------------------------------------------------------------------
+
+def _batch_specs(cfg: ArchConfig, b: int, s: int) -> Tree:
+    t = {"tokens": spec([b, s], ["batch", "seq"], jnp.int32, "zeros"),
+         "labels": spec([b, s], ["batch", "seq"], jnp.int32, "zeros")}
+    if cfg.encoder is not None:
+        t["source_embeds"] = spec(
+            [b, cfg.encoder.source_len, cfg.d_model],
+            ["batch", "seq", None], jnp.bfloat16, "zeros")
+    if cfg.n_prefix_embeddings > 0:
+        t["prefix_embeds"] = spec(
+            [b, cfg.n_prefix_embeddings, cfg.d_model],
+            ["batch", "seq", None], jnp.bfloat16, "zeros")
+    return t
+
+
+def train_state_specs(cfg: ArchConfig, *, compression: bool = False
+                      ) -> Tree:
+    p = build_param_specs(cfg)
+    mu, nu = adamw_init_specs(p)
+    state = {"params": p, "mu": mu, "nu": nu,
+             "step": spec([], [], jnp.int32, "zeros")}
+    if compression:
+        # error-feedback residuals for int8 gradient compression
+        ef, _ = adamw_init_specs(p)
+        state["ef"] = ef
+    return state
+
+
+def _cache_dt(flags: Optional[RunFlags]):
+    if flags is not None and flags.cache_dtype == "int8":
+        return jnp.int8
+    return jnp.bfloat16
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                flags: Optional[RunFlags] = None) -> Dict[str, Tree]:
+    """All abstract inputs for one cell, keyed by step argument name."""
+    if shape.kind == "train":
+        return {"state": train_state_specs(cfg),
+                "batch": _batch_specs(cfg, shape.global_batch,
+                                      shape.seq_len)}
+    if shape.kind == "prefill":
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch.pop("labels")
+        # VLM prefix embeddings extend the prefill sequence past seq_len
+        cache_len = shape.seq_len + cfg.n_prefix_embeddings
+        return {"params": build_param_specs(cfg),
+                "batch": batch,
+                "caches": build_cache_specs(cfg, shape.global_batch,
+                                            cache_len, _cache_dt(flags))}
+    if shape.kind == "decode":
+        b = shape.global_batch
+        return {"params": build_param_specs(cfg),
+                "tokens": spec([b, 1], ["batch", "seq"], jnp.int32, "zeros"),
+                "caches": build_cache_specs(cfg, b, shape.seq_len,
+                                            _cache_dt(flags)),
+                "pos": spec([], [], jnp.int32, "zeros")}
+    raise ValueError(shape.kind)
+
+
+def abstract_inputs(cfg: ArchConfig, shape: ShapeSpec,
+                    flags: Optional[RunFlags] = None) -> Dict[str, Tree]:
+    return {k: abstract(v)
+            for k, v in input_specs(cfg, shape, flags).items()}
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    flags: Optional[RunFlags] = None) -> Dict[str, Tree]:
+    rules = rules_for(shape, cfg)
+    return {k: shardings_for_specs(v, rules, mesh)
+            for k, v in input_specs(cfg, shape, flags).items()}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def _act_ctx(mesh: Optional[Mesh], rules: Optional[RuleSet]):
+    """Activation-hint context for traced step bodies (no-op when unset)."""
+    if mesh is None or rules is None:
+        return contextlib.nullcontext()
+    return activation_sharding(mesh, rules)
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig = AdamWConfig(),
+                    flags: RunFlags = RunFlags(),
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[RuleSet] = None,
+                    compression: bool = False) -> Callable:
+    def train_step(state: Tree, batch: Tree) -> Tuple[Tree, Tree]:
+        with _act_ctx(mesh, rules):
+            accum = max(flags.grad_accum, 1)
+            if accum == 1:
+                def loss_fn(p):
+                    return train_loss(p, batch, cfg, flags)
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            else:
+                # microbatch gradient accumulation: splits the global batch
+                # on the leading axis; shrinks saved activations by `accum`
+                # and overlaps per-microbatch DCN gradient reduction with
+                # the next microbatch's compute under the XLA scheduler.
+                micro = jax.tree_util.tree_map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), batch)
+
+                def body(carry, mb):
+                    loss_acc, grad_acc = carry
+                    def loss_fn(p):
+                        return train_loss(p, mb, cfg, flags)
+                    l, g = jax.value_and_grad(loss_fn)(state["params"])
+                    grad_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), grad_acc, g)
+                    return (loss_acc + l, grad_acc), None
+
+                zero_g = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32),
+                    state["params"])
+                (loss, grads), _ = jax.lax.scan(
+                    body, (jnp.zeros((), jnp.float32), zero_g), micro)
+                loss = loss / accum
+                grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            new_ef = None
+            if compression:
+                # int8 round-trip + error feedback BEFORE the (DCN)
+                # gradient reduction consumes them (training/compression)
+                grads, new_ef = compress_grads(grads, state["ef"])
+            new_p, new_mu, new_nu, gnorm = adamw_update(
+                state["params"], grads, state["mu"], state["nu"],
+                state["step"], opt)
+            new_state = {"params": new_p, "mu": new_mu, "nu": new_nu,
+                         "step": state["step"] + 1}
+            if compression:
+                new_state["ef"] = new_ef
+            return new_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, flags: RunFlags = RunFlags(),
+                      mesh: Optional[Mesh] = None,
+                      rules: Optional[RuleSet] = None) -> Callable:
+    def prefill_step(params: Tree, batch: Tree, caches: Tree):
+        with _act_ctx(mesh, rules):
+            return prefill(params, batch, caches, cfg, flags)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, flags: RunFlags = RunFlags(),
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[RuleSet] = None) -> Callable:
+    def serve_step(params: Tree, tokens: jnp.ndarray, caches: Tree,
+                   pos: jnp.ndarray):
+        with _act_ctx(mesh, rules):
+            return decode_step(params, tokens, caches, pos, cfg, flags)
+    return serve_step
+
+
+def jit_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+             flags: RunFlags = RunFlags(),
+             opt: AdamWConfig = AdamWConfig()):
+    """jit-with-shardings for one (arch x shape) cell.  Returns
+    (jitted_fn, abstract_args_tuple) ready for .lower(*args)."""
+    shard = input_shardings(cfg, shape, mesh, flags)
+    abstr = abstract_inputs(cfg, shape, flags)
+    rules = rules_for(shape, cfg)
+
+    def logits_sharding(b):
+        return NamedSharding(mesh, partition_spec(
+            ("batch", "vocab"), (b, cfg.vocab_size), rules, mesh))
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, opt, flags, mesh=mesh, rules=rules)
+        in_sh = (shard["state"], shard["batch"])
+        out_sh = (shard["state"],
+                  {"loss": NamedSharding(mesh, PartitionSpec()),
+                   "grad_norm": NamedSharding(mesh, PartitionSpec())})
+        args = (abstr["state"], abstr["batch"])
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, flags, mesh=mesh, rules=rules)
+        in_sh = (shard["params"], shard["batch"], shard["caches"])
+        out_sh = (logits_sharding(shape.global_batch), shard["caches"])
+        args = (abstr["params"], abstr["batch"], abstr["caches"])
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    else:
+        fn = make_decode_step(cfg, flags, mesh=mesh, rules=rules)
+        in_sh = (shard["params"], shard["tokens"], shard["caches"],
+                 shard["pos"])
+        out_sh = (logits_sharding(shape.global_batch), shard["caches"])
+        args = (abstr["params"], abstr["tokens"], abstr["caches"],
+                abstr["pos"])
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jf, args

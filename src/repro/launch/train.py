@@ -1,0 +1,44 @@
+"""Training launcher: `PYTHONPATH=src python -m repro.launch.train
+--arch <id> [--steps N] [--reduced]`.
+
+On this CPU container use --reduced (the full configs are exercised via
+the dry-run); on a real TPU slice the same entrypoint builds the
+production mesh and shards per TRAIN_RULES.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models.model import RunFlags
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import TrainConfig, train
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CPU-runnable) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    tc = TrainConfig(
+        steps=args.steps, batch_size=args.batch, seq_len=args.seq,
+        checkpoint_dir=args.ckpt, grad_compression=args.grad_compression,
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps),
+        flags=RunFlags(grad_accum=args.grad_accum))
+    train(cfg, tc)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Model substrate: configs, layers, attention variants, MoE, recurrence,
+and the composable stack (train / prefill / decode)."""
+from repro.models.config import (ArchConfig, BlockSpec, FFN, Mixer,
+                                 MLAConfig, MoEConfig, RecurrentConfig,
+                                 ScanGroup, dense_lm)
+from repro.models.model import (RunFlags, build_cache_specs,
+                                build_param_specs, decode_step, prefill,
+                                train_loss)
+from repro.models.params import (ParamSpec, abstract, materialize,
+                                 param_bytes, param_count, spec)
+
+__all__ = [
+    "ArchConfig", "BlockSpec", "FFN", "Mixer", "MLAConfig", "MoEConfig",
+    "RecurrentConfig", "ScanGroup", "dense_lm", "RunFlags",
+    "build_cache_specs", "build_param_specs", "decode_step", "prefill",
+    "train_loss", "ParamSpec", "abstract", "materialize", "param_bytes",
+    "param_count", "spec",
+]

@@ -1,0 +1,412 @@
+"""Attention mixers: GQA/MQA/MHA (full + sliding-window), MLA, cross-attn.
+
+Design notes (DESIGN.md section 5):
+  * The sliding window is a *traced scalar* riding through lax.scan metadata,
+    so local and global layers (gemma3's 5:1) share one scanned block: a
+    global layer simply carries window = max_position.
+  * KV caches are full-length ring-free buffers written with
+    dynamic_update_slice; window locality is enforced by the mask.  (A
+    ring-buffer window cache is a memory optimization explored in
+    EXPERIMENTS.md section Perf.)
+  * MLA keeps the paper-faithful two-path structure: naive (materialized
+    per-head K/V) for train/prefill, absorbed (score and output computed in
+    the compressed kv_lora space) for decode, where materializing per-head
+    K/V for a 32k cache would be prohibitive.
+  * The pure-jnp paths here are the dry-run/reference implementations; the
+    Pallas kernels in repro/kernels implement the same contracts for TPU
+    (swap via ops.use_pallas, validated against these in tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.config import ArchConfig, MLAConfig
+from repro.models.params import spec
+
+WINDOW_SLICE_OFF = 2 ** 29     # windows this large never slice (full attn)
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """Rotary embedding. x: [..., S, H, K] (K even), positions: [..., S],
+    theta may be a python float or a traced scalar (per-layer metadata)."""
+    k = x.shape[-1]
+    half = k // 2
+    freq_exp = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** (-freq_exp)
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # [...,S,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]          # broadcast over heads
+    cos = cos[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ArchConfig, *, cross: bool = False) -> Tree:
+    d, hq, hkv, k = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.param_dtype
+    p = {
+        "wq": spec([d, hq, k], ["embed", "heads", "hdim"], dt),
+        "wk": spec([d, hkv, k], ["embed", "kv_heads", "hdim"], dt),
+        "wv": spec([d, hkv, k], ["embed", "kv_heads", "hdim"], dt),
+        "wo": spec([hq, k, d], ["heads", "hdim", "embed"], dt),
+    }
+    return p
+
+
+def _mask(pos_q: jnp.ndarray, pos_k: jnp.ndarray, window,
+          causal: bool) -> jnp.ndarray:
+    """[..., S_q, S_k] boolean validity mask from absolute positions."""
+    dq = pos_q[..., :, None]
+    dk = pos_k[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), bool)
+    if causal:
+        m = dk <= dq
+    if window is not None:
+        m = m & (dq - dk < window)
+    return m
+
+
+def _sdpa(q, k, v, mask, *, softcap: Optional[float] = None) -> jnp.ndarray:
+    """q:[B,S,Hkv,G,K] k:[B,T,Hkv,K] v:[B,T,Hkv,K] mask:[B or 1,S,T]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshgk,bthk->bhgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = shard_hint(scores, ("batch", "kv_heads", None, "seq", "kv_len"))
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthk->bshgk", w.astype(v.dtype), v)
+    return shard_hint(out, ("batch", "seq", "kv_heads", None, None))
+
+
+def _sdpa_chunked(q, k, v, pos_q, pos_k, window, causal, *,
+                  softcap: Optional[float] = None,
+                  valid_upto=None, chunk: int = 1024) -> jnp.ndarray:
+    """Memory-efficient SDPA: sequential scan over query chunks so the fp32
+    score working set is [B, chunk, T] instead of [B, S, T] (Rabe-Staats;
+    the Pallas flash kernel is the TPU-native equivalent).  Falls back to
+    one-shot _sdpa when S <= chunk.
+
+    When ``window`` is a STATIC int and positions are contiguous (the
+    train/prefill path), each chunk slices K/V to its causal window span
+    -- span = window-1 past keys + chunk in-chunk keys -- so sliding-
+    window layers pay O(S * window) score FLOPs instead of O(S^2).  This
+    is the chunked-JAX analogue of the flash kernel's block skipping.
+    """
+    b, s = q.shape[0], q.shape[1]
+    t = k.shape[1]
+    if s <= chunk or s % chunk != 0:
+        mask = _mask(pos_q, pos_k, window, causal)
+        if mask.ndim == 2:
+            mask = mask[None]
+        if valid_upto is not None:
+            mask = mask & (pos_k <= valid_upto)[:, None, :]
+        return _sdpa(q, k, v, mask, softcap=softcap)
+    nq = s // chunk
+    qs = jnp.moveaxis(q.reshape((b, nq, chunk) + q.shape[2:]), 1, 0)
+    pq = jnp.moveaxis(
+        jnp.broadcast_to(pos_q, (b, s)).reshape(b, nq, chunk), 1, 0)
+
+    static_window = isinstance(window, int) and window < WINDOW_SLICE_OFF
+    span = min(((window - 1 + chunk + chunk - 1) // chunk) * chunk, t) \
+        if static_window else t
+    use_slice = static_window and causal and span < t
+
+    def one(args):
+        qc, pqc = args
+        if use_slice:
+            # positions are uniform across batch on this path (prefill/
+            # train count 0..S-1); slice the K/V span this chunk can see
+            start = jnp.clip(pqc[0, 0] - (span - chunk), 0, t - span)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            pkc = start + jnp.arange(span)[None, :]
+        else:
+            kc, vc, pkc = k, v, pos_k
+        mask = _mask(pqc, pkc, window, causal)
+        if mask.ndim == 2:
+            mask = mask[None]
+        if valid_upto is not None:
+            mask = mask & (pkc <= valid_upto)[:, None, :]
+        return _sdpa(qc, kc, vc, mask, softcap=softcap)
+
+    out = jax.lax.map(one, (qs, pq))
+    return jnp.moveaxis(out, 0, 1).reshape((b, s) + out.shape[3:])
+
+
+def gqa_attention(
+    p: Tree,
+    x: jnp.ndarray,                       # [B,S,D]
+    positions: jnp.ndarray,               # [B,S] absolute positions
+    *,
+    cfg: ArchConfig,
+    window=None,                          # None | int | traced scalar
+    rope_theta=10_000.0,
+    causal: bool = True,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_offset: Optional[jnp.ndarray] = None,   # scalar write index
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross
+    chunk_q: int = 1024,                          # memory-efficient chunking
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full/windowed GQA.  With a cache: writes K/V at cache_offset and
+    attends over the whole buffer (mask handles validity via positions)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = hq // hkv
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    valid_upto = None
+    if kv_override is not None:
+        k, v = kv_override
+        new_cache = cache
+        pos_k = jnp.arange(k.shape[1])[None, :]
+        causal = False
+        window = None
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+        if cache is not None:
+            t = cache["k"].shape[1]
+            off = cache_offset if cache_offset is not None else 0
+            new_cache = dict(cache)
+            new_cache.update(_kv_write(cache, "k", k, (0, off, 0, 0)))
+            new_cache.update(_kv_write(cache, "v", v, (0, off, 0, 0)))
+            if s == t:
+                # prefill covering the whole cache: attend with the fresh
+                # batch-local K/V and write the (possibly differently-
+                # sharded) cache as a side effect.  Reading attention
+                # inputs back through the model-sharded cache would
+                # all-gather ~cache-size bytes per query chunk per layer.
+                pos_k = positions
+            else:
+                k = _kv_read(new_cache, "k", q.dtype)
+                v = _kv_read(new_cache, "v", q.dtype)
+                pos_k = jnp.arange(t)[None, :]
+                # entries at/after the write frontier are invalid
+                valid_upto = jnp.asarray(off + s - 1, jnp.int32)
+        else:
+            new_cache = None
+            pos_k = positions
+
+    q = q.reshape(b, s, hkv, g, hd)
+    out = _sdpa_chunked(q, k.astype(q.dtype), v.astype(q.dtype),
+                        positions, pos_k, window, causal,
+                        softcap=cfg.attn_logit_softcap,
+                        valid_upto=valid_upto, chunk=chunk_q)
+    out = out.reshape(b, s, hq, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def _kv_write(cache: dict, name: str, val: jnp.ndarray, idx
+              ) -> dict:
+    """Write K or V into the cache, quantizing per (token, head) when the
+    buffer is int8 (scales stored alongside as `<name>_scale`)."""
+    buf = cache[name]
+    out = {}
+    if buf.dtype == jnp.int8:
+        vf = val.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(vf), axis=-1, keepdims=True)   # [B,S,H,1]
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        q = jnp.clip(jnp.round(vf / scale), -127, 127).astype(jnp.int8)
+        out[name] = jax.lax.dynamic_update_slice(buf, q, idx)
+        out[f"{name}_scale"] = jax.lax.dynamic_update_slice(
+            cache[f"{name}_scale"],
+            scale[..., 0].astype(cache[f"{name}_scale"].dtype), idx[:-1])
+    else:
+        out[name] = jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                                 idx)
+    return out
+
+
+def _kv_read(cache: dict, name: str, dtype) -> jnp.ndarray:
+    buf = cache[name]
+    if buf.dtype == jnp.int8:
+        scale = cache[f"{name}_scale"].astype(jnp.float32)[..., None]
+        return (buf.astype(jnp.float32) * scale).astype(dtype)
+    return buf.astype(dtype)
+
+
+def gqa_cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Tree:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    c = {
+        "k": spec([batch, max_len, hkv, hd],
+                  ["batch", "kv_len", "kv_heads", "hdim"], dtype, "zeros"),
+        "v": spec([batch, max_len, hkv, hd],
+                  ["batch", "kv_len", "kv_heads", "hdim"], dtype, "zeros"),
+    }
+    if dtype == jnp.int8:
+        # per-(token, head) symmetric quantization scales (1/head_dim the
+        # footprint of the int8 payload)
+        for nm in ("k", "v"):
+            c[f"{nm}_scale"] = spec(
+                [batch, max_len, hkv],
+                ["batch", "kv_len", "kv_heads"], jnp.bfloat16, "ones")
+    return c
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) -- DeepSeek-V2 / MiniCPM3
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ArchConfig) -> Tree:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    qk = m.qk_nope_head_dim
+    qr = m.qk_rope_head_dim
+    return {
+        "wq_a": spec([d, m.q_lora_rank], ["embed", "lora"], dt),
+        "q_norm": spec([m.q_lora_rank], ["lora"], jnp.float32, "ones"),
+        "wq_b": spec([m.q_lora_rank, h, qk + qr], ["lora", "heads", "hdim"], dt),
+        "wkv_a": spec([d, m.kv_lora_rank + qr], ["embed", "lora"], dt),
+        "kv_norm": spec([m.kv_lora_rank], ["lora"], jnp.float32, "ones"),
+        "wk_b": spec([m.kv_lora_rank, h, qk], ["lora", "heads", "hdim"], dt),
+        "wv_b": spec([m.kv_lora_rank, h, m.v_head_dim],
+                     ["lora", "heads", "hdim"], dt),
+        "wo": spec([h, m.v_head_dim, d], ["heads", "hdim", "embed"], dt),
+    }
+
+
+def _rms(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+def mla_project(p: Tree, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ArchConfig, rope_theta) -> Tuple[jnp.ndarray, ...]:
+    """Shared projections: q_nope [B,S,H,qk], q_rope [B,S,H,qr],
+    c_kv [B,S,kvr], k_rope [B,S,qr]."""
+    m = cfg.mla
+    qk, qr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q_lat = _rms(q_lat, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = rope(q_rope, positions, rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = _rms(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention_naive(
+    p: Tree, x: jnp.ndarray, positions: jnp.ndarray, *, cfg: ArchConfig,
+    rope_theta=10_000.0, chunk_q: int = 1024,
+) -> jnp.ndarray:
+    """Train/prefill path: materialize per-head K/V from the latent cache
+    (standard DeepSeek practice), query-chunked for a bounded fp32 score
+    working set."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = mla_project(p, x, positions, cfg,
+                                               rope_theta)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["wk_b"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["wv_b"])
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    pos_k = positions
+
+    def attend(qn, qr, pq):
+        scores = (jnp.einsum("bshk,bthk->bhst", qn, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshk,btk->bhst", qr, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        scores = shard_hint(scores, ("batch", "heads", "seq", "kv_len"))
+        mask = _mask(pq, pos_k, None, True)
+        if mask.ndim == 2:
+            mask = mask[None]
+        scores = jnp.where(mask[:, None], scores,
+                           jnp.finfo(scores.dtype).min)
+        w = jax.nn.softmax(scores, -1).astype(v.dtype)
+        return jnp.einsum("bhst,bthk->bshk", w, v)
+
+    if s <= chunk_q or s % chunk_q != 0:
+        out = attend(q_nope, q_rope, positions)
+    else:
+        nq = s // chunk_q
+        qn = jnp.moveaxis(
+            q_nope.reshape((b, nq, chunk_q) + q_nope.shape[2:]), 1, 0)
+        qr = jnp.moveaxis(
+            q_rope.reshape((b, nq, chunk_q) + q_rope.shape[2:]), 1, 0)
+        pq = jnp.moveaxis(
+            jnp.broadcast_to(positions, (b, s)).reshape(b, nq, chunk_q),
+            1, 0)
+        out = jax.lax.map(lambda a: attend(*a), (qn, qr, pq))
+        out = jnp.moveaxis(out, 0, 1).reshape((b, s) + out.shape[3:])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_attention_absorbed(
+    p: Tree, x: jnp.ndarray, positions: jnp.ndarray, *, cfg: ArchConfig,
+    cache: Dict[str, jnp.ndarray], cache_offset, rope_theta=10_000.0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Decode path: scores/outputs computed against the compressed cache.
+
+    q_c = q_nope @ wk_b  (absorb): [B,S,H,kvr]; scores = q_c . c_kv +
+    q_rope . k_rope; out = (attn @ c_kv) @ wv_b.  The per-head K/V never
+    materialize -- the whole point of MLA's compressed KV cache.
+    """
+    m = cfg.mla
+    q_nope, q_rope, c_kv_new, k_rope_new = mla_project(
+        p, x, positions, cfg, rope_theta)
+    t = cache["c_kv"].shape[1]
+    off = cache_offset
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, off, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, off, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    q_c = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])   # absorbed query
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshr,btr->bhst", q_c, c_kv.astype(q_c.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope,
+                           k_rope.astype(q_rope.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    scores = shard_hint(scores, ("batch", "heads", "seq", "kv_len"))
+    pos_k = jnp.arange(t)[None, :]
+    s = x.shape[1]
+    mask = _mask(positions, pos_k, None, True) & \
+        (pos_k <= (off + s - 1))[:, None, :]
+    scores = jnp.where(mask[:, None], scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores, -1)
+    ctx = jnp.einsum("bhst,btr->bshr", w.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["wv_b"])      # absorbed value
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y, new_cache
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Tree:
+    m = cfg.mla
+    return {
+        "c_kv": spec([batch, max_len, m.kv_lora_rank],
+                     ["batch", "kv_len", "lora"], dtype, "zeros"),
+        "k_rope": spec([batch, max_len, m.qk_rope_head_dim],
+                       ["batch", "kv_len", "hdim"], dtype, "zeros"),
+    }

@@ -1,0 +1,90 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, embeddings, losses."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import spec
+
+Tree = Any
+
+
+# -- norms ------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Tree:
+    return {"scale": spec([d], ["embed"], jnp.float32, "ones")}
+
+
+def rmsnorm(p: Tree, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# -- MLP --------------------------------------------------------------------
+
+def mlp_spec(cfg: ArchConfig, d_ff: Optional[int] = None) -> Tree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    return {
+        "wi_gate": spec([d, f], ["embed", "ffn"], dt),
+        "wi_up": spec([d, f], ["embed", "ffn"], dt),
+        "wo": spec([f, d], ["ffn", "embed"], dt),
+    }
+
+
+def mlp(p: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["wo"])
+
+
+# -- embeddings / head ------------------------------------------------------
+
+def embed_specs(cfg: ArchConfig) -> Tree:
+    p = {"table": spec([cfg.vocab_size, cfg.d_model], ["vocab", "embed"],
+                       cfg.param_dtype, "embed")}
+    if not cfg.tie_embeddings:
+        p["head"] = spec([cfg.d_model, cfg.vocab_size], ["embed", "vocab"],
+                         cfg.param_dtype)
+    return p
+
+
+def embed(p: Tree, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    x = jnp.take(p["table"], tokens, axis=0)
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def unembed(p: Tree, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["table"])
+    return jnp.einsum("bsd,dv->bsv", x, p["head"])
+
+
+# -- loss -------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  logits [B,S,V] (any float dtype,
+    reduced in fp32), labels [B,S] int32.
+
+    The label log-prob is extracted with a one-hot contraction, NOT
+    take_along_axis: a gather over the vocab dim -- which is sharded over
+    the "model" axis -- would force GSPMD to all-gather the full fp32
+    logits (69 GB/device for gemma3's 262k vocab at train_4k).  The
+    one-hot product fuses into the reduction and keeps logits sharded.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(shifted * onehot, axis=-1) + m[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,283 @@
+"""The composable LM stack: param-spec construction + train/prefill/decode.
+
+Layer stacks run as lax.scan over *scan groups* (config.py): parameters are
+stacked with a leading "layers" axis, per-layer metadata (window, rope
+theta) rides as scanned arrays, and caches are scanned xs/ys.  This keeps
+the HLO depth-independent -- essential for 512-device SPMD compiles on the
+dry-run host (DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard_hint
+from repro.models import blocks as blk_lib
+from repro.models.blocks import WINDOW_INF, apply_block, block_cache_specs, \
+    block_param_specs
+from repro.models.config import ArchConfig, BlockSpec, FFN, Mixer, ScanGroup
+from repro.models.layers import embed, embed_specs, rmsnorm, rmsnorm_spec, \
+    softmax_xent, unembed
+from repro.models.params import ParamSpec, is_spec, spec, tree_map_specs
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Per-step execution knobs (hillclimbed in EXPERIMENTS.md Perf)."""
+    remat: str = "full"            # none | full | dots
+    moe_impl: Optional[str] = None  # override cfg.moe.impl
+    scan_unroll: int = 1
+    attn_chunk: int = 1024         # query-chunked attention working set
+    grad_accum: int = 1            # microbatch gradient accumulation
+    moe_group: int = 0             # MoE dispatch group size (0 = one group)
+    cache_dtype: str = "bf16"      # decode KV cache dtype: bf16 | int8
+
+
+# ---------------------------------------------------------------------------
+# parameter / cache / metadata construction
+# ---------------------------------------------------------------------------
+
+def _stack_specs(tree: Tree, repeats: int) -> Tree:
+    return tree_map_specs(
+        lambda s: ParamSpec((repeats,) + s.shape, s.dtype,
+                            ("layers",) + s.axes, s.init, s.init_scale),
+        tree)
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    """The encoder tower reuses the arch dims with full bidirectional attn."""
+    enc_blk = BlockSpec(Mixer.ATTN, FFN.DENSE, rope_theta=cfg.rope_theta)
+    return dataclasses.replace(
+        cfg, groups=(ScanGroup("enc", cfg.encoder.n_layers, (enc_blk,)),),
+        encoder=None)
+
+
+def build_param_specs(cfg: ArchConfig) -> Tree:
+    cfg.validate()
+    p: Dict[str, Tree] = {"embed": embed_specs(cfg),
+                          "final_norm": rmsnorm_spec(cfg.d_model)}
+    p["groups"] = {}
+    for g in cfg.groups:
+        gp = {}
+        for j, blk in enumerate(g.pattern):
+            gp[f"pos{j}"] = _stack_specs(block_param_specs(cfg, blk),
+                                         g.repeats)
+        p["groups"][g.name] = gp
+    if cfg.encoder is not None:
+        ecfg = _encoder_cfg(cfg)
+        enc = {"final_norm": rmsnorm_spec(cfg.d_model), "groups": {}}
+        for g in ecfg.groups:
+            gp = {}
+            for j, blk in enumerate(g.pattern):
+                gp[f"pos{j}"] = _stack_specs(block_param_specs(ecfg, blk),
+                                             g.repeats)
+            enc["groups"][g.name] = gp
+        p["encoder"] = enc
+    return p
+
+
+def build_cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Tree:
+    src = cfg.encoder.source_len if cfg.encoder is not None else 0
+    caches: Dict[str, Tree] = {}
+    for g in cfg.groups:
+        gc = {}
+        for j, blk in enumerate(g.pattern):
+            gc[f"pos{j}"] = _stack_specs(
+                block_cache_specs(cfg, blk, batch, max_len,
+                                  source_len=src, dtype=dtype), g.repeats)
+        caches[g.name] = gc
+    return caches
+
+
+def build_meta(cfg: ArchConfig) -> Dict[str, Dict[str, Dict[str, jnp.ndarray]]]:
+    """Per-group, per-pattern-position scanned metadata arrays [repeats]."""
+    flat_windows = list(cfg.layer_windows) if cfg.layer_windows else None
+    flat_thetas = list(cfg.layer_thetas) if cfg.layer_thetas else None
+    metas: Dict[str, Dict[str, Dict[str, jnp.ndarray]]] = {}
+    li = 0
+    for g in cfg.groups:
+        per_pos: Dict[str, Dict[str, List]] = {
+            f"pos{j}": {"window": [], "theta": []}
+            for j in range(len(g.pattern))}
+        for r in range(g.repeats):
+            for j, blk in enumerate(g.pattern):
+                w = blk.window
+                th = blk.rope_theta
+                if flat_windows is not None:
+                    w = flat_windows[li]
+                if flat_thetas is not None:
+                    th = flat_thetas[li]
+                per_pos[f"pos{j}"]["window"].append(
+                    WINDOW_INF if w is None else int(w))
+                per_pos[f"pos{j}"]["theta"].append(float(th))
+                li += 1
+        metas[g.name] = {
+            k: {"window": jnp.asarray(v["window"], jnp.int32),
+                "theta": jnp.asarray(v["theta"], jnp.float32)}
+            for k, v in per_pos.items()}
+    return metas
+
+
+# ---------------------------------------------------------------------------
+# scan-group execution
+# ---------------------------------------------------------------------------
+
+def _run_groups(
+    params: Tree,
+    groups: Tuple[ScanGroup, ...],
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    metas: Tree,
+    *,
+    mode: str,
+    caches: Optional[Tree] = None,
+    cache_offset=None,
+    enc_out: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    flags: RunFlags = RunFlags(),
+) -> Tuple[jnp.ndarray, Optional[Tree], jnp.ndarray]:
+    new_caches: Optional[Dict[str, Tree]] = {} if caches is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for g in groups:
+        gp = params["groups"][g.name]
+        gm = metas[g.name]
+        gc = caches[g.name] if caches is not None else None
+
+        def body(carry, per_layer):
+            h, aux = carry
+            p_i, m_i, c_i = per_layer
+            nc_i = {}
+            for j, blk in enumerate(g.pattern):
+                key = f"pos{j}"
+                h, nc, a = apply_block(
+                    p_i[key], blk, cfg, h, positions, m_i[key],
+                    mode=mode,
+                    cache=c_i[key] if c_i is not None else None,
+                    cache_offset=cache_offset, enc_out=enc_out,
+                    causal=causal, moe_impl=flags.moe_impl,
+                    moe_group=flags.moe_group or None,
+                    attn_chunk=flags.attn_chunk)
+                h = shard_hint(h, ("batch", "seq", None))
+                nc_i[key] = nc if nc is not None else {}
+                aux = aux + a
+            return (h, aux), nc_i
+
+        if mode == "train" and flags.remat != "none":
+            policy = None
+            if flags.remat == "dots":
+                policy = jax.checkpoint_policies.checkpoint_dots
+            body = jax.checkpoint(body, policy=policy)
+
+        # unroll only when it divides the trip count (length-1 tail groups
+        # stay rolled; the dry-run's two-point cost scaling relies on this)
+        u = flags.scan_unroll if (g.repeats > 1 and
+                                  g.repeats % flags.scan_unroll == 0) else 1
+        if gc is None:
+            def body_nc(carry, per_layer):
+                p_i, m_i = per_layer
+                return body(carry, (p_i, m_i, None))
+            (x, aux_total), _ = jax.lax.scan(
+                body_nc, (x, aux_total), (gp, gm), unroll=u)
+        else:
+            (x, aux_total), nc = jax.lax.scan(
+                body, (x, aux_total), (gp, gm, gc), unroll=u)
+            new_caches[g.name] = nc
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# model-level entry points
+# ---------------------------------------------------------------------------
+
+def _encode(params: Tree, cfg: ArchConfig, source_embeds: jnp.ndarray,
+            flags: RunFlags) -> jnp.ndarray:
+    """Run the bidirectional encoder tower (whisper-style)."""
+    ecfg = _encoder_cfg(cfg)
+    b, t, _ = source_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    metas = build_meta(ecfg)
+    x, _, _ = _run_groups(params["encoder"], ecfg.groups, ecfg,
+                          source_embeds.astype(cfg.compute_dtype), positions,
+                          metas, mode="train", causal=False, flags=flags)
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _prepare_inputs(params: Tree, cfg: ArchConfig, batch: Dict[str, Any]
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Embed tokens, prepend VLM prefix embeddings if any.
+    Returns (x, positions, n_prefix)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg).astype(cfg.compute_dtype)
+    n_prefix = 0
+    if cfg.n_prefix_embeddings > 0:
+        pre = batch["prefix_embeds"].astype(cfg.compute_dtype)
+        n_prefix = pre.shape[1]
+        x = jnp.concatenate([pre, x], axis=1)
+    x = shard_hint(x, ("batch", "seq", None))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return x, positions, n_prefix
+
+
+def train_loss(params: Tree, batch: Dict[str, Any], cfg: ArchConfig,
+               flags: RunFlags = RunFlags()) -> jnp.ndarray:
+    """Mean next-token loss (+ MoE aux).  batch: tokens, labels,
+    [source_embeds], [prefix_embeds], [loss_mask]."""
+    x, positions, n_prefix = _prepare_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encode(params, cfg, batch["source_embeds"], flags)
+    x, _, aux = _run_groups(params, cfg.groups, cfg, x, positions,
+                            build_meta(cfg), mode="train", enc_out=enc_out,
+                            flags=flags)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix > 0:
+        x = x[:, n_prefix:, :]
+    logits = unembed(params["embed"], x, cfg)
+    logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    mask = batch.get("loss_mask")
+    return softmax_xent(logits, batch["labels"], mask) + aux
+
+
+def prefill(params: Tree, batch: Dict[str, Any], caches: Tree,
+            cfg: ArchConfig, flags: RunFlags = RunFlags()
+            ) -> Tuple[jnp.ndarray, Tree]:
+    """Process the full prompt, returning (last-token logits [B,V],
+    populated caches)."""
+    x, positions, n_prefix = _prepare_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encode(params, cfg, batch["source_embeds"], flags)
+    x, new_caches, _ = _run_groups(
+        params, cfg.groups, cfg, x, positions, build_meta(cfg),
+        mode="prefill", caches=caches, cache_offset=0, enc_out=enc_out,
+        flags=flags)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)[:, 0, :]
+    return logits, new_caches
+
+
+def decode_step(params: Tree, tokens: jnp.ndarray, caches: Tree,
+                pos: jnp.ndarray, cfg: ArchConfig,
+                flags: RunFlags = RunFlags()
+                ) -> Tuple[jnp.ndarray, Tree]:
+    """One decode step.  tokens [B,1]; pos: scalar int32 write offset.
+    Returns (logits [B,V], updated caches)."""
+    x = embed(params["embed"], tokens, cfg).astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(pos + jnp.arange(s)[None], (b, s))
+    x, new_caches, _ = _run_groups(
+        params, cfg.groups, cfg, x, positions, build_meta(cfg),
+        mode="decode", caches=caches, cache_offset=pos, flags=flags)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)[:, -1, :]
+    return logits, new_caches

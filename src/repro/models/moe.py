@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN: router + two dispatch strategies.
+
+  * "onehot": GShard/Mesh-TF capacity-based one-hot dispatch einsums.  The
+    TPU-classic formulation -- always GSPMD-shardable (experts on the
+    "model"/EP axis), but pays dispatch/combine einsum FLOPs of
+    2*B*S*E*C*D, which for narrow-expert archs (DeepSeek-V2: F=1536)
+    rivals the expert compute itself.  This is the BASELINE; EXPERIMENTS.md
+    section Perf hillclimbs it.
+  * "dense": every expert computes every token, weighted by router prob.
+    Exact (no capacity drops), used as the correctness oracle in tests and
+    for tiny smoke configs.
+
+Router: softmax -> top-k with load-balancing auxiliary loss (Switch/GShard
+style), computed in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_hint
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models.params import spec
+
+Tree = Any
+
+
+def moe_specs(cfg: ArchConfig) -> Tree:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    p = {
+        "router": spec([d, m.n_experts], ["embed", "experts"], jnp.float32),
+        "wi_gate": spec([m.n_experts, d, m.d_ff_expert],
+                        ["experts", "embed", "ffn"], dt),
+        "wi_up": spec([m.n_experts, d, m.d_ff_expert],
+                      ["experts", "embed", "ffn"], dt),
+        "wo": spec([m.n_experts, m.d_ff_expert, d],
+                   ["experts", "ffn", "embed"], dt),
+    }
+    if m.n_shared_experts > 0:
+        f_sh = m.d_ff_shared or m.d_ff_expert * m.n_shared_experts
+        p["shared"] = {
+            "wi_gate": spec([d, f_sh], ["embed", "ffn"], dt),
+            "wi_up": spec([d, f_sh], ["embed", "ffn"], dt),
+            "wo": spec([f_sh, d], ["ffn", "embed"], dt),
+        }
+    return p
+
+
+def _router(p: Tree, x: jnp.ndarray, m: MoEConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (gates [B,S,k] fp32, expert_idx [B,S,k] int32, aux_loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    # renormalize selected gates (DeepSeek/Mixtral convention)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balancing loss
+    e = m.n_experts
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    prob_frac = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(dispatch_frac * prob_frac) * m.router_aux_loss
+    return gates, idx, aux
+
+
+def _expert_ffn(p: Tree, h: jnp.ndarray) -> jnp.ndarray:
+    """h: [E, B, C, D] -> [E, B, C, D] via per-expert SwiGLU."""
+    g = jnp.einsum("ebcd,edf->ebcf", h, p["wi_gate"])
+    u = jnp.einsum("ebcd,edf->ebcf", h, p["wi_up"])
+    return jnp.einsum("ebcf,efd->ebcd", jax.nn.silu(g) * u, p["wo"])
+
+
+def moe_onehot(p: Tree, x: jnp.ndarray, m: MoEConfig, *,
+               capacity_factor: Optional[float] = None,
+               group_size: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based one-hot dispatch (GShard).  x: [B,S,D].
+
+    ``group_size`` splits the sequence into independent dispatch groups
+    (the GShard "G" dim): capacity C is per group, so the dispatch/combine
+    einsum cost B*S*E*C*D becomes B*S*E*(g*k*cf/E)*D = B*S*g*k*cf*D --
+    LINEAR in g instead of quadratic in S.  At S=32k / E=8 this is the
+    difference between the dispatch einsums dominating the whole model
+    (mixtral prefill baseline: 24x MODEL_FLOPS) and being a few percent.
+    Groups also cap token imbalance blast radius (drops are per-group).
+    """
+    b, s, d = x.shape
+    g = group_size or getattr(m, "group_size", None)
+    if g and g < s and s % g == 0:
+        ng = s // g
+        xg = x.reshape(b * ng, g, d)
+        y, aux = moe_onehot(p, xg, m, capacity_factor=capacity_factor,
+                            group_size=None)
+        return y.reshape(b, s, d), aux
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    cap = max(int(math.ceil(s * m.top_k * cf / m.n_experts)), 1)
+    gates, idx, aux = _router(p, x, m)
+
+    e = m.n_experts
+    # position of each (token, slot) in its expert's queue, computed slot-
+    # major so slot 0 assignments take priority (GShard convention)
+    dispatch = jnp.zeros((b, s, e, cap), x.dtype)
+    combine = jnp.zeros((b, s, e, cap), x.dtype)
+    counts = jnp.zeros((b, e), jnp.int32)
+    for slot in range(m.top_k):
+        onehot_e = jax.nn.one_hot(idx[..., slot], e, dtype=jnp.int32)  # [B,S,E]
+        pos = jnp.cumsum(onehot_e, axis=1) - 1 + counts[:, None, :]
+        counts = counts + onehot_e.sum(axis=1)
+        within = (pos < cap) & (onehot_e > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(within, pos, cap), cap + 1,
+                                dtype=x.dtype)[..., :cap]         # drop ovfl
+        contrib = onehot_e[..., None].astype(x.dtype) * pos_oh
+        dispatch = dispatch + contrib
+        combine = combine + contrib * gates[..., slot][..., None, None] \
+            .astype(x.dtype)
+    # shard the big [B,S,E,C] lookup tensors over (data, model): with the
+    # expert dim on "model" the dispatch einsum computes each (expert,
+    # batch) block locally and only the combine contraction all-reduces
+    dispatch = shard_hint(dispatch, ("batch", None, "experts", None))
+    combine = shard_hint(combine, ("batch", None, "experts", None))
+
+    expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    expert_in = shard_hint(expert_in, ("experts", "batch", None, None))
+    expert_out = _expert_ffn(p, expert_in)
+    expert_out = shard_hint(expert_out, ("experts", "batch", None, None))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), expert_out)
+    return shard_hint(y, ("batch", "seq", None)), aux
+
+
+def moe_dense(p: Tree, x: jnp.ndarray, m: MoEConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact dense fallback: all experts on all tokens (oracle/smoke)."""
+    gates, idx, aux = _router(p, x, m)
+    # full gate matrix [B,S,E]
+    full = jnp.zeros(x.shape[:2] + (m.n_experts,), jnp.float32)
+    for slot in range(m.top_k):
+        full = full + jax.nn.one_hot(idx[..., slot], m.n_experts,
+                                     dtype=jnp.float32) * \
+            gates[..., slot][..., None]
+    h = x[None]                                          # [1,B,S,D]
+    g = jnp.einsum("bsd,edf->ebsf", x, p["wi_gate"])
+    u = jnp.einsum("bsd,edf->ebsf", x, p["wi_up"])
+    eo = jnp.einsum("ebsf,efd->ebsd", jax.nn.silu(g) * u, p["wo"])
+    y = jnp.einsum("bse,ebsd->bsd", full.astype(x.dtype), eo)
+    return y, aux
+
+
+def shared_expert(p: Tree, x: jnp.ndarray) -> jnp.ndarray:
+    sp = p["shared"]
+    g = jnp.einsum("bsd,df->bsf", x, sp["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, sp["wi_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, sp["wo"])
+
+
+def moe_ffn(p: Tree, x: jnp.ndarray, cfg: ArchConfig, *,
+            impl: Optional[str] = None,
+            group_size: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full MoE FFN: routed experts (+ shared experts if configured)."""
+    m = cfg.moe
+    impl = impl or m.impl
+    if impl == "dense":
+        y, aux = moe_dense(p, x, m)
+    elif impl == "onehot":
+        y, aux = moe_onehot(p, x, m,
+                            group_size=group_size or m.group_size or None)
+    else:
+        raise ValueError(f"unknown moe impl {impl!r}")
+    if m.n_shared_experts > 0:
+        y = y + shared_expert(p, x)
+    return y, aux

@@ -1,0 +1,108 @@
+"""Parameter-spec trees: one model definition, three materializations.
+
+A model is defined once as a pytree of ``ParamSpec`` leaves (shape, dtype,
+*logical axes*, init law).  From that single tree we derive:
+
+  * ``abstract(tree)``   -> jax.ShapeDtypeStruct tree   (dry-run lowering,
+                            no host/device allocation)
+  * ``shardings(tree, rules, mesh)`` -> NamedSharding tree (pjit in/out specs)
+  * ``materialize(tree, key)`` -> concrete jnp arrays    (smoke tests, the
+                            100M training example)
+
+Logical axes name *semantic* dimensions ("embed", "heads", "ffn", "experts",
+"vocab", "layers", "kv_len", ...); ``distributed/sharding.py`` maps them to
+mesh axes per rule-set (train vs serve).  This is the MaxText-style logical/
+physical split, kept dependency-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    init_scale: Optional[float] = None
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} must match shape {self.shape} rank")
+
+
+def spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+         dtype=jnp.bfloat16, init: str = "normal",
+         init_scale: Optional[float] = None) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), dtype, tuple(axes),
+                     init, init_scale)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Tree) -> Tree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def abstract(tree: Tree) -> Tree:
+    """ShapeDtypeStruct stand-ins -- zero allocation (dry-run inputs)."""
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                          tree)
+
+
+def param_bytes(tree: Tree) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(tree, is_leaf=is_spec):
+        total += math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+    return total
+
+
+def param_count(tree: Tree) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree_util.tree_leaves(tree, is_leaf=is_spec))
+
+
+def _init_leaf(s: ParamSpec, key: jax.Array) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    # fan-in scaled normal by default; "embed" uses unit normal
+    if s.init == "embed":
+        scale = 1.0
+    else:
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = s.init_scale if s.init_scale is not None else 1.0 / math.sqrt(
+            max(fan_in, 1))
+    x = jax.random.normal(key, s.shape, jnp.float32) * scale
+    return x.astype(s.dtype)
+
+
+def materialize(tree: Tree, key: jax.Array) -> Tree:
+    """Concrete random init.  Keys are derived from the leaf path so that
+    adding/removing an unrelated parameter does not reshuffle others.
+    The path hash is crc32, NOT Python hash() -- the builtin is salted
+    per process (PYTHONHASHSEED), which would make multi-host / restarted
+    inits diverge silently."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    paths = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)[0]
+    out = []
+    for (path, s) in paths:
+        path_str = jax.tree_util.keystr(path)
+        stable = zlib.crc32(path_str.encode()) & 0x7FFFFFFF
+        k = jax.random.fold_in(key, stable)
+        out.append(_init_leaf(s, k))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,314 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+All three expose (train/prefill) a full-sequence form and (decode) a
+single-step state update, with state pytrees sized independently of sequence
+length -- this is what makes the `long_500k` shape feasible for the ssm/
+hybrid architectures (DESIGN.md section 4).
+
+  * RG-LRU uses an associative scan (log-depth) over the diagonal linear
+    recurrence; the Pallas kernel in repro/kernels/rglru_scan.py implements
+    the same contract with VMEM-blocked tiles.
+  * mLSTM has a parallel (attention-like, stabilized exponential-gate)
+    training form and an O(1)-state recurrent decode form.
+  * sLSTM is genuinely sequential (memory mixing through block-diagonal
+    recurrent weights), so training runs a lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import spec
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: proj -> conv1d -> RG-LRU, gated)
+# ---------------------------------------------------------------------------
+
+def rglru_specs(cfg: ArchConfig) -> Tree:
+    d = cfg.d_model
+    r = cfg.recurrent
+    w = r.lru_width or d
+    dt = cfg.param_dtype
+    return {
+        "w_in": spec([d, w], ["embed", "ffn"], dt),      # recurrence branch
+        "w_gate": spec([d, w], ["embed", "ffn"], dt),    # gelu gate branch
+        "conv_w": spec([r.conv_width, w], ["conv", "ffn"], dt),
+        "conv_b": spec([w], ["ffn"], dt, "zeros"),
+        "lambda_param": spec([w], ["ffn"], jnp.float32, "ones"),
+        "w_rec_gate": spec([w, w], ["ffn", "ffn2"], dt),   # r_t projection
+        "b_rec_gate": spec([w], ["ffn"], dt, "zeros"),
+        "w_in_gate": spec([w, w], ["ffn", "ffn2"], dt),    # i_t projection
+        "b_in_gate": spec([w], ["ffn"], dt, "zeros"),
+        "w_out": spec([w, d], ["ffn", "embed"], dt),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_gates(p: Tree, u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a_t (decay) and b_t (input) of the diagonal recurrence, fp32."""
+    uf = u.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", uf, p["w_rec_gate"].astype(jnp.float32))
+        + p["b_rec_gate"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", uf, p["w_in_gate"].astype(jnp.float32))
+        + p["b_in_gate"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda_param"]) * r_gate
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * uf)
+    return a, b
+
+
+def _conv1d(p: Tree, u: jnp.ndarray,
+            state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal temporal conv.  u: [B,S,W].  state: [B,cw-1,W]
+    carries the last cw-1 inputs for decode continuity."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)        # [B, S+cw-1, W]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(cw):
+        out = out + ext[:, i:i + u.shape[1], :].astype(jnp.float32) * \
+            p["conv_w"][i].astype(jnp.float32)
+    out = out + p["conv_b"].astype(jnp.float32)
+    new_state = ext[:, ext.shape[1] - (cw - 1):, :]
+    return out.astype(u.dtype), new_state
+
+
+def rglru_block(
+    p: Tree, x: jnp.ndarray, *, cfg: ArchConfig,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full Griffin recurrent block.  x: [B,S,D].
+    state = {"conv": [B,cw-1,W], "h": [B,W]} or None (fresh sequence)."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    gate = jnp.einsum("bsd,dw->bsw", x, p["w_gate"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _conv1d(p, u, conv_state)
+    a, b = _rglru_gates(p, u)                    # [B,S,W] fp32
+
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+    if h0 is not None:
+        # fold the carried state into the first step's input term
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "h": h[:, -1, :].astype(state["h"].dtype)}
+    return out, new_state
+
+
+def rglru_state_spec(cfg: ArchConfig, batch: int) -> Tree:
+    r = cfg.recurrent
+    w = r.lru_width or cfg.d_model
+    return {
+        "conv": spec([batch, r.conv_width - 1, w],
+                     ["batch", "conv", "ffn"], jnp.bfloat16, "zeros"),
+        "h": spec([batch, w], ["batch", "ffn"], jnp.float32, "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> Tree:
+    d, h = cfg.d_model, cfg.n_heads
+    k = d // h
+    dt = cfg.param_dtype
+    return {
+        "wq": spec([d, h, k], ["embed", "heads", "hdim"], dt),
+        "wk": spec([d, h, k], ["embed", "heads", "hdim"], dt),
+        "wv": spec([d, h, k], ["embed", "heads", "hdim"], dt),
+        "w_i": spec([d, h], ["embed", "heads"], dt),     # exp input gate
+        "b_i": spec([h], ["heads"], dt, "zeros"),
+        "w_f": spec([d, h], ["embed", "heads"], dt),     # forget gate
+        "b_f": spec([h], ["heads"], dt, "zeros"),
+        "w_o": spec([d, h, k], ["embed", "heads", "hdim"], dt),  # out gate
+        "wo": spec([h, k, d], ["heads", "hdim", "embed"], dt),
+    }
+
+
+def mlstm_parallel(p: Tree, x: jnp.ndarray, *, cfg: ArchConfig) -> jnp.ndarray:
+    """Stabilized parallel form (xLSTM paper eqs. 24-27).  O(S^2) like
+    attention; used for training/prefill."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    k = d // h
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]) / math.sqrt(k)
+    kk = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    log_i = (jnp.einsum("bsd,dh->bsh", x, p["w_i"]) + p["b_i"]) \
+        .astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, p["w_f"]) + p["b_f"]).astype(jnp.float32))
+
+    # F[t,s] = sum_{j=s+1..t} log_f_j ; D[t,s] = F[t,s] + log_i_s  (s<=t)
+    cum = jnp.cumsum(log_f, axis=1)                       # [B,S,H]
+    fmat = cum[:, :, None, :] - cum[:, None, :, :]        # [B,t,s,H]
+    dmat = fmat + log_i[:, None, :, :]
+    tidx = jnp.arange(s)
+    causal = (tidx[None, :, None] >= tidx[None, None, :])[..., None]
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)              # stabilizer [B,t,1,H]
+    w = jnp.exp(dmat - m)                                 # [B,t,s,H]
+    scores = jnp.einsum("bthk,bshk->btsh", q, kk,
+                        preferred_element_type=jnp.float32) * w
+    denom = jnp.maximum(jnp.abs(scores.sum(axis=2)),
+                        jnp.exp(-m[:, :, 0, :]))          # [B,t,H]
+    out = jnp.einsum("btsh,bshk->bthk", scores, v.astype(jnp.float32))
+    out = out / denom[..., None]
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["w_o"])
+                       .astype(jnp.float32))
+    out = (out * o).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mlstm_step(p: Tree, x: jnp.ndarray, state: Dict[str, jnp.ndarray], *,
+               cfg: ArchConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Recurrent decode step.  x: [B,1,D].
+    state: C [B,H,K,K], n [B,H,K], m [B,H]."""
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.n_heads
+    k = d // h
+    xt = x[:, 0]
+    q = jnp.einsum("bd,dhk->bhk", xt, p["wq"]) / math.sqrt(k)
+    kk = jnp.einsum("bd,dhk->bhk", xt, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", xt, p["wv"])
+    log_i = (xt @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid((xt @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+
+    m_prev = state["m"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_sc = jnp.exp(log_f + m_prev - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    kf, vf = kk.astype(jnp.float32), v.astype(jnp.float32)
+    c_new = state["C"] * f_sc[..., None] + \
+        i_sc[..., None] * kf[..., :, None] * vf[..., None, :]
+    n_new = state["n"] * f_sc + i_sc * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)),
+                      jnp.exp(-m_new))
+    out = num / den[..., None]
+    o = jax.nn.sigmoid(jnp.einsum("bd,dhk->bhk", xt, p["w_o"])
+                       .astype(jnp.float32))
+    out = (out * o).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    return y, {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_state_spec(cfg: ArchConfig, batch: int) -> Tree:
+    h = cfg.n_heads
+    k = cfg.d_model // h
+    return {
+        "C": spec([batch, h, k, k], ["batch", "heads", "hdim", "hdim2"],
+                  jnp.float32, "zeros"),
+        "n": spec([batch, h, k], ["batch", "heads", "hdim"], jnp.float32,
+                  "zeros"),
+        "m": spec([batch, h], ["batch", "heads"], jnp.float32, "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory with block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig) -> Tree:
+    d, h = cfg.d_model, cfg.n_heads
+    k = d // h
+    dt = cfg.param_dtype
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = spec([d, h, k], ["embed", "heads", "hdim"], dt)
+        gates[f"r_{g}"] = spec([h, k, k], ["heads", "hdim", "hdim2"], dt)
+        gates[f"b_{g}"] = spec([h, k], ["heads", "hdim"], dt, "zeros")
+    gates["wo"] = spec([h, k, d], ["heads", "hdim", "embed"], dt)
+    return gates
+
+
+def _slstm_cell(p: Tree, xt: jnp.ndarray, st: Dict[str, jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One sLSTM timestep.  xt: [B,D]; state h,c,n,m: [B,H,K] fp32."""
+    hp = st["h"]
+
+    def gate(g):
+        wx = jnp.einsum("bd,dhk->bhk", xt, p[f"w_{g}"]).astype(jnp.float32)
+        rh = jnp.einsum("bhj,hjk->bhk", hp, p[f"r_{g}"].astype(jnp.float32))
+        return wx + rh + p[f"b_{g}"].astype(jnp.float32)
+
+    z = jnp.tanh(gate("z"))
+    log_i = gate("i")                      # exponential input gate
+    log_f = jax.nn.log_sigmoid(gate("f"))
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_sc * st["c"] + i_sc * z
+    n_new = jnp.maximum(f_sc * st["n"] + i_sc, 1e-6)
+    h_new = o * c_new / n_new
+    return h_new, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_sequence(p: Tree, x: jnp.ndarray, *, cfg: ArchConfig,
+                   state: Optional[Dict[str, jnp.ndarray]] = None
+                   ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Sequential scan over time (training + prefill).  x: [B,S,D]."""
+    b, s, d = x.shape
+    h, k = cfg.n_heads, cfg.d_model // cfg.n_heads
+    st0 = state
+    if st0 is None:
+        z = jnp.zeros((b, h, k), jnp.float32)
+        st0 = {"h": z, "c": z, "n": z + 1e-6, "m": z}
+    st0 = {kk: v.astype(jnp.float32) for kk, v in st0.items()}
+
+    def body(st, xt):
+        h_new, st_new = _slstm_cell(p, xt, st)
+        return st_new, h_new
+
+    st_fin, hs = jax.lax.scan(body, st0, jnp.swapaxes(x, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1).astype(x.dtype)          # [B,S,H,K]
+    y = jnp.einsum("bshk,hkd->bsd", hs, p["wo"])
+    new_state = None
+    if state is not None:
+        new_state = {kk: v.astype(state[kk].dtype) for kk, v in st_fin.items()}
+    return y, new_state
+
+
+def slstm_step(p: Tree, x: jnp.ndarray, state: Dict[str, jnp.ndarray], *,
+               cfg: ArchConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    st = {kk: v.astype(jnp.float32) for kk, v in state.items()}
+    h_new, st_new = _slstm_cell(p, x[:, 0], st)
+    y = jnp.einsum("bhk,hkd->bd", h_new.astype(x.dtype), p["wo"])
+    return y[:, None, :], {kk: v.astype(state[kk].dtype)
+                           for kk, v in st_new.items()}
+
+
+def slstm_state_spec(cfg: ArchConfig, batch: int) -> Tree:
+    h, k = cfg.n_heads, cfg.d_model // cfg.n_heads
+    mk = lambda init: spec([batch, h, k], ["batch", "heads", "hdim"],
+                           jnp.float32, init)
+    return {"h": mk("zeros"), "c": mk("zeros"), "n": mk("ones"),
+            "m": mk("zeros")}

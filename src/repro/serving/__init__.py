@@ -1,0 +1,6 @@
+from repro.serving.energy import EnergyMeter, SimClock
+from repro.serving.engine import GenerationResult, ServingEngine
+from repro.serving.model_manager import ManagedModel, ModelManager
+
+__all__ = ["EnergyMeter", "SimClock", "ServingEngine", "GenerationResult",
+           "ModelManager", "ManagedModel"]

@@ -1,0 +1,88 @@
+"""Energy accounting for the serving runtime (the paper's Eq. 1 applied
+to a live system).
+
+``EnergyMeter`` integrates device power over state intervals:
+bare (no model resident) / parked (model resident, idle -- pays the
+context tax) / loading / active.  The paper's central result means the
+meter does NOT need to know HOW MUCH memory a parked model uses -- only
+whether a runtime context is live (beta ~ 0, section 4.2).
+
+A ``SimClock`` lets the 24 h example and the tests run in simulated time;
+production would pass time.monotonic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.core.power_model import DeviceProfile
+
+
+class SimClock:
+    def __init__(self, t0: float = 0.0):
+        self._t = t0
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("time cannot go backwards")
+        self._t += dt
+
+
+@dataclasses.dataclass
+class EnergyMeter:
+    profile: DeviceProfile
+    clock: Callable[[], float]
+
+    def __post_init__(self):
+        self._state = "bare"
+        self._since = self.clock()
+        self._energy_j: Dict[str, float] = {}
+        self._durations_s: Dict[str, float] = {}
+        self._power_override: Optional[float] = None
+
+    def _power_w(self, state: str) -> float:
+        if state == "bare":
+            return self.profile.p_base_w
+        if state == "parked":
+            return self.profile.idle_power_w(context_active=True)
+        if state == "loading":
+            return self._power_override or (self.profile.p_base_w + 30.0)
+        if state == "active":
+            return self.profile.active_power_w(0.6)
+        raise ValueError(state)
+
+    def transition(self, state: str, *, power_override_w: Optional[float]
+                   = None) -> None:
+        """Close the current interval and enter `state`."""
+        now = self.clock()
+        dt = now - self._since
+        p = self._power_w(self._state)
+        self._energy_j[self._state] = self._energy_j.get(self._state, 0.0) \
+            + dt * p
+        self._durations_s[self._state] = \
+            self._durations_s.get(self._state, 0.0) + dt
+        self._state = state
+        self._since = now
+        self._power_override = power_override_w
+
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def totals(self) -> Dict[str, float]:
+        """Finalize up to 'now' and report energy (Wh) per state + total."""
+        self.transition(self._state)         # flush current interval
+        wh = {k: v / 3600.0 for k, v in self._energy_j.items()}
+        wh["total"] = sum(wh.values())
+        return wh
+
+    def durations(self) -> Dict[str, float]:
+        return dict(self._durations_s)
+
+    def parking_tax_wh(self) -> float:
+        """Energy attributable to the context DVFS step while parked."""
+        parked_s = self._durations_s.get("parked", 0.0)
+        return parked_s * self.profile.dvfs_step_w / 3600.0

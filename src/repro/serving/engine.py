@@ -1,0 +1,154 @@
+"""Single-model serving engine: slot-based continuous batching over the
+prefill/decode steps from models/model.py.
+
+The engine owns a fixed decode working set: ``max_batch`` slots sharing
+one stacked KV cache of ``max_len``.  Requests prefill into a free slot
+(prompt written at cache offset 0..len) and then join the batched decode
+step; finished slots are released and immediately reusable -- continuous
+batching without recompilation (slot count and cache length are static).
+
+Runs the same code the dry-run lowers; on this container the reduced
+configs decode for real on CPU (examples/serve_parking.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.model import (RunFlags, build_cache_specs,
+                                build_param_specs, decode_step, prefill)
+from repro.models.params import materialize
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    request_id: int
+    prompt: List[int]
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params: Tree, *, max_batch: int = 4,
+                 max_len: int = 128, flags: RunFlags = RunFlags(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.flags = flags
+        self._rng = np.random.default_rng(seed)
+        self._caches = materialize(
+            build_cache_specs(cfg, max_batch, max_len, jnp.float32),
+            jax.random.PRNGKey(0))
+        self._slot_pos = np.zeros(max_batch, np.int32)   # next write offset
+        self._slot_live = np.zeros(max_batch, bool)
+        self._slot_last = np.zeros(max_batch, np.int32)  # last sampled token
+
+        cfg_ = cfg
+        fl = flags
+
+        def _prefill(params, batch, caches):
+            return prefill(params, batch, caches, cfg_, fl)
+
+        def _decode(params, tokens, caches, pos):
+            return decode_step(params, tokens, caches, pos, cfg_, fl)
+
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_decode = jax.jit(_decode)
+
+    # -- slots -------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.max_batch) if not self._slot_live[i]]
+
+    # -- serving -----------------------------------------------------------
+    def admit(self, prompt: List[int], extras: Optional[Dict[str, Any]]
+              = None) -> int:
+        """Prefill `prompt` into a free slot; returns the slot id."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        # batch-1 prefill then scatter the slot's cache rows
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        batch = {"tokens": toks}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        b1_caches = materialize(
+            build_cache_specs(self.cfg, 1, self.max_len, jnp.float32),
+            jax.random.PRNGKey(0))
+        logits, b1_caches = self._jit_prefill(self.params, batch, b1_caches)
+        next_tok = int(jnp.argmax(logits[0]))
+        # scatter slot rows: every cache leaf has batch on some axis; the
+        # builders put batch first after the layer axis, i.e. axis=1
+        def put(big, small):
+            return jax.lax.dynamic_update_index_in_dim(
+                big, small[:, 0], slot, 1)
+        self._caches = jax.tree_util.tree_map(put, self._caches, b1_caches)
+        self._slot_pos[slot] = len(prompt)
+        self._slot_live[slot] = True
+        self._slot_last[slot] = next_tok
+        return slot
+
+    def step(self) -> Dict[int, int]:
+        """One batched decode step across live slots; returns
+        {slot: sampled_token}.  Slots advance independent positions via
+        per-slot position vector folded into a single max-pos decode (the
+        static-shape compromise: positions differ per slot, so we decode
+        at each slot's own offset using a vectorized pos array)."""
+        if not self._slot_live.any():
+            return {}
+        # single shared offset decode: use per-slot position by running
+        # decode at pos = max over live slots after aligning; simplest
+        # correct scheme for heterogeneous positions: loop grouped by pos
+        out: Dict[int, int] = {}
+        tokens = jnp.asarray(self._slot_last, jnp.int32)[:, None]
+        # group slots by their current position -> one decode per group
+        live = np.where(self._slot_live)[0]
+        for pos in np.unique(self._slot_pos[live]):
+            pos_slots = [s for s in live if self._slot_pos[s] == pos]
+            logits, new_caches = self._jit_decode(
+                self.params, tokens, self._caches, jnp.int32(pos))
+            # keep cache updates only for the slots at this position
+            def merge(new, old):
+                sel = np.zeros(self.max_batch, bool)
+                sel[pos_slots] = True
+                sel_arr = jnp.asarray(sel)
+                bshape = [1] * new.ndim
+                bdim = 1  # batch axis after layer axis
+                bshape[bdim] = self.max_batch
+                return jnp.where(sel_arr.reshape(bshape), new, old)
+            self._caches = jax.tree_util.tree_map(merge, new_caches,
+                                                  self._caches)
+            for s in pos_slots:
+                tok = int(jnp.argmax(logits[s]))
+                out[s] = tok
+                self._slot_last[s] = tok
+                self._slot_pos[s] += 1
+        return out
+
+    def release(self, slot: int) -> None:
+        self._slot_live[slot] = False
+        self._slot_pos[slot] = 0
+
+    def generate(self, prompt: List[int], max_new: int = 16
+                 ) -> GenerationResult:
+        """Convenience single-request generation."""
+        slot = self.admit(prompt)
+        toks: List[int] = [int(self._slot_last[slot])]
+        for _ in range(max_new - 1):
+            if self._slot_pos[slot] + 1 >= self.max_len:
+                break
+            out = self.step()
+            toks.append(out[slot])
+        self.release(slot)
+        return GenerationResult(request_id=slot, prompt=list(prompt),
+                                tokens=toks)

@@ -1,0 +1,163 @@
+"""Multi-model lifecycle manager: the paper's breakeven scheduling as a
+first-class serving feature.
+
+``ModelManager`` owns a device's energy state (EnergyMeter) and a set of
+registered models.  Each model carries a per-arch ``LoaderSpec`` (derived
+from its checkpoint bytes -- coldstart.loader_from_checkpoint) and an
+eviction ``Policy`` (core/scheduler.py).  On request arrival the manager
+cold-starts if needed (charging loading energy + latency), serves, and
+arms the policy's idle timeout; ``tick()`` applies due evictions.
+
+Node-failure handling: ``fail()`` simulates a device loss -- resident
+models drop, the meter resets to bare, and the next request transparently
+reloads (the serving-side analogue of checkpoint/restart; see
+tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
+from repro.core.power_model import DeviceProfile
+from repro.core.scheduler import Policy
+from repro.serving.energy import EnergyMeter, SimClock
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class ManagedModel:
+    model_id: str
+    loader: LoaderSpec
+    policy: Policy
+    load_fn: Optional[Callable[[], Any]] = None   # returns engine/params
+    engine: Any = None
+    resident: bool = False
+    evict_at: float = math.inf
+    cold_starts: int = 0
+    requests: int = 0
+    added_latency_s: float = 0.0
+
+
+class ModelManager:
+    def __init__(self, profile: DeviceProfile, *,
+                 clock: Optional[SimClock] = None):
+        self.profile = profile
+        self.clock = clock or SimClock()
+        self.meter = EnergyMeter(profile, self.clock)
+        self.models: Dict[str, ManagedModel] = {}
+
+    # -- registry -----------------------------------------------------------
+    def register(self, model_id: str, *, policy: Policy,
+                 loader: Optional[LoaderSpec] = None,
+                 checkpoint_bytes: Optional[int] = None,
+                 load_fn: Optional[Callable[[], Any]] = None) -> ManagedModel:
+        if loader is None:
+            if checkpoint_bytes is None:
+                raise ValueError("need loader or checkpoint_bytes")
+            loader = loader_from_checkpoint(model_id, checkpoint_bytes,
+                                            self.profile)
+        policy.reset()
+        m = ManagedModel(model_id=model_id, loader=loader, policy=policy,
+                         load_fn=load_fn)
+        self.models[model_id] = m
+        return m
+
+    def _any_resident(self) -> bool:
+        return any(m.resident for m in self.models.values())
+
+    # -- lifecycle ------------------------------------------------------------
+    def _load(self, m: ManagedModel) -> None:
+        m.cold_starts += 1
+        self.meter.transition("loading",
+                              power_override_w=m.loader.p_load_w)
+        self.clock.advance(m.loader.t_load_s)
+        if m.load_fn is not None:
+            m.engine = m.load_fn()
+        m.resident = True
+        self.meter.transition("parked")
+
+    def _evict(self, m: ManagedModel) -> None:
+        m.engine = None                      # frees device buffers
+        m.resident = False
+        m.evict_at = math.inf
+        if not self._any_resident():
+            self.meter.transition("bare")
+
+    def tick(self) -> None:
+        """Apply due evictions at the current sim time."""
+        now = self.clock()
+        for m in self.models.values():
+            if m.resident and now >= m.evict_at:
+                self._evict(m)
+
+    def fail(self) -> None:
+        """Device failure: all residents drop instantly (no graceful
+        unload); energy state falls to bare.  Requests after this
+        transparently cold-start."""
+        for m in self.models.values():
+            m.engine = None
+            m.resident = False
+            m.evict_at = math.inf
+        self.meter.transition("bare")
+
+    # -- request path --------------------------------------------------------
+    def handle_request(self, model_id: str, *, service_s: float = 0.0,
+                       work_fn: Optional[Callable[[Any], Any]] = None
+                       ) -> Any:
+        """Serve one request at the current sim time.
+
+        Advances the clock by load time (if cold) + service_s, charges
+        energy per state, updates the policy, and re-arms the idle
+        timeout (Eq. 12/13 for Breakeven policies)."""
+        self.tick()
+        m = self.models[model_id]
+        m.requests += 1
+        m.policy.observe_arrival(self.clock())
+        if not m.resident:
+            t0 = self.clock()
+            self._load(m)
+            m.added_latency_s += self.clock() - t0
+        result = None
+        if work_fn is not None or service_s > 0:
+            self.meter.transition("active")
+            if work_fn is not None:
+                result = work_fn(m.engine)
+            self.clock.advance(service_s)
+        self.meter.transition("parked")
+        timeout = m.policy.idle_timeout_s(self.clock())
+        m.evict_at = self.clock() + timeout if math.isfinite(timeout) \
+            else math.inf
+        return result
+
+    def run_trace(self, model_id: str, arrivals_s: List[float], *,
+                  horizon_s: float, service_s: float = 0.0) -> Dict[str, Any]:
+        """Replay an arrival trace (the serving-level Table 6)."""
+        for a in sorted(arrivals_s):
+            target = max(a, self.clock())
+            self._advance_with_evictions(target)
+            self.handle_request(model_id, service_s=service_s)
+        self._advance_with_evictions(horizon_s)
+        m = self.models[model_id]
+        return {"energy_wh": self.meter.totals(),
+                "durations_s": self.meter.durations(),
+                "cold_starts": m.cold_starts,
+                "requests": m.requests,
+                "mean_added_latency_s": (m.added_latency_s / m.requests
+                                         if m.requests else 0.0),
+                "parking_tax_wh": self.meter.parking_tax_wh()}
+
+    def _advance_with_evictions(self, target: float) -> None:
+        """Advance sim time, applying any eviction deadlines on the way."""
+        while True:
+            pending = [m.evict_at for m in self.models.values()
+                       if m.resident and math.isfinite(m.evict_at)
+                       and m.evict_at <= target]
+            if not pending:
+                break
+            t_evt = min(pending)
+            self.clock.advance(max(t_evt - self.clock(), 0.0))
+            self.tick()
+        self.clock.advance(max(target - self.clock(), 0.0))

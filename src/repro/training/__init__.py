@@ -1,0 +1,4 @@
+from repro.training.optimizer import (AdamWConfig, adamw_init_specs,
+                                      adamw_update)
+
+__all__ = ["AdamWConfig", "adamw_init_specs", "adamw_update"]

@@ -1,0 +1,90 @@
+"""AdamW in pure JAX (no optax in this container).
+
+Moments are fp32 regardless of parameter dtype and shard exactly like
+their parameters (the ParamSpec trees share logical axes), which under
+TRAIN_RULES gives ZeRO-style distributed optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec, tree_map_specs
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init_specs(param_specs: Tree) -> Tuple[Tree, Tree]:
+    """(mu_specs, nu_specs): fp32 zeros with the params' logical axes."""
+    def f32(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, jnp.float32, s.axes, "zeros")
+    return tree_map_specs(f32, param_specs), tree_map_specs(f32, param_specs)
+
+
+def lr_at(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree: Tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def adamw_update(
+    params: Tree, grads: Tree, mu: Tree, nu: Tree, step: jnp.ndarray,
+    cfg: AdamWConfig,
+) -> Tuple[Tree, Tree, Tree, jnp.ndarray]:
+    """One AdamW step.  Returns (params, mu, nu, grad_norm)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    lr = lr_at(step, cfg)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(mu)
+    flat_v = jax.tree_util.tree_leaves(nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, gnorm

@@ -1,0 +1,146 @@
+"""GPipe-style pipeline parallelism over the "pod" axis (optional feature;
+DESIGN.md section 5).
+
+The production multi-pod mesh is (pod=2, data=16, model=16).  The default
+regime treats "pod" as pure data parallelism (gradient all-reduce over
+DCN).  This module offers the alternative: the layer stack is split into
+`n_stages = pod` contiguous stages; microbatches stream through stages
+with activations handed across pods via ``jax.lax.ppermute`` on a GPipe
+schedule (fill, steady state, drain).  Because ppermute is differentiable
+(its transpose is the reverse permutation), ``jax.grad`` through the
+pipelined forward yields the correct pipelined backward -- no manual
+schedule for the bwd pass.
+
+Scope: decoder-only dense stacks with a single scan group (the
+pipeline-stage split must be a clean layer partition).  The dry-run proof
+(`python -m repro.launch.dryrun_pipeline`) lowers + compiles the
+pipelined train step on the (2,16,16) mesh; `tests/test_pipeline.py`
+checks numerical equivalence against the plain stack on a degenerate
+1-stage mesh and the schedule logic on a simulated 2-stage run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import embed, rmsnorm, softmax_xent, unembed
+from repro.models.model import RunFlags, build_meta, _run_groups
+
+Tree = Any
+
+
+def split_stage_params(params: Tree, cfg: ArchConfig, n_stages: int) -> Tree:
+    """Reshape the single scan group's stacked params [L, ...] into
+    [n_stages, L/n_stages, ...] so stage s owns slice s."""
+    if len(cfg.groups) != 1 or len(cfg.groups[0].pattern) != 1:
+        raise ValueError("pipeline supports single-group single-pattern "
+                         "stacks (dense decoder-only)")
+    L = cfg.groups[0].repeats
+    if L % n_stages:
+        raise ValueError(f"{L} layers not divisible by {n_stages} stages")
+
+    def reshape(leaf):
+        return leaf.reshape((n_stages, L // n_stages) + leaf.shape[1:])
+
+    gname = cfg.groups[0].name
+    out = dict(params)
+    out["groups"] = {gname: {"pos0": jax.tree_util.tree_map(
+        reshape, params["groups"][gname]["pos0"])}}
+    return out
+
+
+def make_pipelined_train_loss(cfg: ArchConfig, mesh: Mesh, *,
+                              n_microbatches: int,
+                              axis: str = "pod",
+                              flags: RunFlags = RunFlags()):
+    """Returns loss_fn(params_staged, batch) running a GPipe schedule via
+    shard_map over `axis`.  params_staged: stage dim leading (sharded over
+    `axis`); batch: tokens/labels [B, S] with B % n_microbatches == 0."""
+    n_stages = mesh.shape[axis]
+    gname = cfg.groups[0].name
+    L_per = cfg.groups[0].repeats // n_stages
+    stage_group = dataclasses.replace(cfg.groups[0], repeats=L_per)
+    stage_cfg = dataclasses.replace(cfg, groups=(stage_group,),
+                                    n_layers=L_per * len(
+                                        stage_group.pattern))
+    metas = build_meta(stage_cfg)
+
+    def stage_fn(p_stage: Tree, h: jnp.ndarray,
+                 positions: jnp.ndarray) -> jnp.ndarray:
+        """Run this device's L/n_stages layers."""
+        params = {"groups": {gname: {"pos0": p_stage}}}
+        out, _, _ = _run_groups(params, stage_cfg.groups, stage_cfg, h,
+                                positions, metas, mode="train", flags=flags)
+        return out
+
+    def pipeline_body(p_stage, emb_mb, positions):
+        """Inside shard_map: emb_mb [M, mb, S, D] microbatched embeddings
+        (replicated across stages); returns final-stage activations."""
+        # shard_map leaves a leading size-1 stage dim on the local slice
+        p_stage = jax.tree_util.tree_map(lambda x: x[0], p_stage)
+        stage = jax.lax.axis_index(axis)
+        M = emb_mb.shape[0]
+        mb_shape = emb_mb.shape[1:]
+        steps = M + n_stages - 1
+        buf = jnp.zeros_like(emb_mb)          # finished microbatches
+        carry = jnp.zeros(mb_shape, emb_mb.dtype)
+
+        def step(t, state):
+            buf, carry = state
+            # stage 0 ingests microbatch t (when in range)
+            mb_in = emb_mb[jnp.clip(t, 0, M - 1)]
+            h_in = jnp.where(stage == 0, mb_in, carry)
+            h_out = stage_fn(p_stage, h_in, positions)
+            # hand activations downstream (last stage wraps to 0, masked)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            nxt = jax.lax.ppermute(h_out, axis, perm)
+            # last stage stores microbatch (t - (n_stages-1)) when valid
+            out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+            valid = (t >= n_stages - 1) & (stage == n_stages - 1)
+            upd = jnp.where(valid, h_out,
+                            buf[out_idx])
+            buf = jax.lax.dynamic_update_index_in_dim(buf, upd, out_idx, 0)
+            return buf, nxt
+
+        buf, _ = jax.lax.fori_loop(0, steps, step, (buf, carry))
+        # broadcast final activations from the last stage to all stages
+        # (each stage computes loss on identical data; psum averages)
+        src = n_stages - 1
+        perm = [(src, i) for i in range(n_stages)]
+        buf = jax.lax.ppermute(buf, axis, [(src, (src + 1) % n_stages)]) \
+            if n_stages > 1 else buf
+        return buf
+
+    from jax.experimental.shard_map import shard_map
+    in_specs = (P(axis), P(), P())
+    out_specs = P(axis)  # stage-local copies; stage (0) holds real output
+
+    smapped = shard_map(pipeline_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+
+    def loss_fn(params_staged: Tree, batch: Dict[str, jnp.ndarray]
+                ) -> jnp.ndarray:
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+        M = n_microbatches
+        x = embed(params_staged["embed"], tokens, cfg) \
+            .astype(cfg.compute_dtype)
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b // M, s))
+        emb_mb = x.reshape(M, b // M, s, x.shape[-1])
+        p_stage = params_staged["groups"][gname]["pos0"]
+        outs = smapped(p_stage, emb_mb, positions)
+        # out_specs P(axis) concatenates stage-local [M, mb, S, D] buffers
+        # along dim 0 -> [n_stages*M, ...]; stage 0's block holds the
+        # pipeline output (ppermuted back from the last stage)
+        h = outs[:M].reshape(b, s, -1)
+        h = rmsnorm(params_staged["final_norm"], h, cfg.norm_eps)
+        logits = unembed(params_staged["embed"], h, cfg)
+        return softmax_xent(logits, labels)
+
+    return loss_fn

@@ -1,0 +1,113 @@
+"""Training driver: data -> jitted train_step -> async checkpoints.
+
+Composes the substrate: synthetic pipeline (repro.data), AdamW train step
+with optional microbatch accumulation and int8 gradient compression
+(repro.training), sharded init, and fault-tolerant resume
+(repro.checkpoint).  The same ``make_train_step`` that the 512-device
+dry-run lowers is what runs here on the host mesh -- one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_pytree
+from repro.data import DataCursor, SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.config import ArchConfig
+from repro.models.model import RunFlags, build_param_specs
+from repro.models.params import materialize
+from repro.training.optimizer import AdamWConfig, adamw_init_specs
+from repro.models.params import tree_map_specs, ParamSpec
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    batch_size: int = 8
+    seq_len: int = 256
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    log_every: int = 10
+    grad_compression: bool = False
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    flags: RunFlags = dataclasses.field(default_factory=RunFlags)
+
+
+def init_state(cfg: ArchConfig, seed: int = 0, *,
+               compression: bool = False) -> Tree:
+    specs = build_param_specs(cfg)
+    params = materialize(specs, jax.random.PRNGKey(seed))
+    mu_s, nu_s = adamw_init_specs(specs)
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), t,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    state = {"params": params, "mu": zeros(mu_s), "nu": zeros(nu_s),
+             "step": jnp.zeros((), jnp.int32)}
+    if compression:
+        state["ef"] = zeros(mu_s)
+    return state
+
+
+def train(cfg: ArchConfig, tc: TrainConfig,
+          log_fn: Callable[[str], None] = print) -> Dict[str, List[float]]:
+    """Run the loop; returns the metric history (losses must descend --
+    asserted by tests/test_training.py and the 100M example)."""
+    step_fn = jax.jit(make_train_step(cfg, tc.opt, tc.flags,
+                                      compression=tc.grad_compression),
+                      donate_argnums=(0,))
+    state = init_state(cfg, tc.seed, compression=tc.grad_compression)
+    cursor = DataCursor()
+
+    mgr = None
+    if tc.checkpoint_dir:
+        mgr = CheckpointManager(tc.checkpoint_dir)
+        last = latest_step(tc.checkpoint_dir)
+        if last is not None:
+            ckpt_tmpl = {"state": state,
+                         "cursor": jnp.zeros((), jnp.int32)}
+            restored = restore_pytree(ckpt_tmpl, tc.checkpoint_dir, last)
+            state = restored["state"]
+            cursor.batch_index = int(restored["cursor"])
+            log_fn(f"[trainer] resumed from step {last} "
+                   f"(batch cursor {cursor.batch_index})")
+
+    ds = SyntheticLMDataset(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
+                            batch_size=tc.batch_size, seed=tc.seed)
+    history: Dict[str, List[float]] = {"loss": [], "grad_norm": [],
+                                       "step_time_s": []}
+    it = ds.iterate(cursor)
+    start_step = int(state["step"])
+    err_state = None
+    for i in range(start_step, tc.steps):
+        batch_np = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        t0 = time.time()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        history["loss"].append(loss)
+        history["grad_norm"].append(float(metrics["grad_norm"]))
+        history["step_time_s"].append(dt)
+        if i % tc.log_every == 0 or i == tc.steps - 1:
+            log_fn(f"[trainer] step {i:5d} loss {loss:8.4f} "
+                   f"gnorm {float(metrics['grad_norm']):8.3f} "
+                   f"{dt*1e3:7.1f} ms")
+        if mgr and tc.checkpoint_every and (i + 1) % tc.checkpoint_every == 0:
+            mgr.save_async({"state": state,
+                            "cursor": jnp.asarray(cursor.batch_index,
+                                                  jnp.int32)}, i + 1)
+    if mgr:
+        mgr.save_async({"state": state,
+                        "cursor": jnp.asarray(cursor.batch_index,
+                                              jnp.int32)}, tc.steps)
+        mgr.close()
+    return history

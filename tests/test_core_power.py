@@ -1,0 +1,77 @@
+"""Power model, telemetry oracle, dose-response, phase-1 pipeline tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import A100, H100, L40S, PROFILES
+from repro.core.doseresponse import (default_vram_ladder,
+                                     run_simulated_dose_response)
+from repro.core.phase1 import analyze_fleet
+from repro.core.telemetry import SimulatedPowerReader, simulate_fleet
+
+
+def test_profiles_match_paper_table2():
+    assert H100.dvfs_step_w == pytest.approx(49.9, abs=0.01)
+    assert A100.dvfs_step_w == pytest.approx(26.3, abs=0.01)
+    assert L40S.dvfs_step_w == pytest.approx(66.4, abs=0.15)  # paper rounds
+    assert L40S.ctx_pct_tdp == pytest.approx(0.19, abs=0.005)
+
+
+@given(st.sampled_from(list(PROFILES.values())),
+       st.booleans(), st.floats(0.0, 48.0))
+@settings(max_examples=60, deadline=None)
+def test_idle_power_piecewise_constant(profile, ctx, vram):
+    """Eq. 1 with beta=0: power independent of VRAM, steps with context."""
+    p = profile.idle_power_w(ctx, vram)
+    assert p == profile.idle_power_w(ctx, 0.0)          # flat in VRAM
+    assert profile.idle_power_w(True, vram) > \
+        profile.idle_power_w(False, vram)               # context step
+
+
+def test_instance_offset_preserves_step():
+    shifted = H100.with_instance_offset(23.0)
+    assert shifted.dvfs_step_w == pytest.approx(H100.dvfs_step_w)
+    assert shifted.p_base_w == pytest.approx(H100.p_base_w + 23.0)
+
+
+def test_reader_rejects_over_capacity():
+    rd = SimulatedPowerReader(H100)
+    with pytest.raises(ValueError):
+        rd.set_state(context_active=True, vram_gb=100.0)
+
+
+def test_dose_response_recovers_flat_beta():
+    for prof in (H100, A100, L40S):
+        dr = run_simulated_dose_response(prof, seed=1)
+        assert abs(dr.regression.slope) < 0.02           # paper bound
+        assert dr.tost.equivalent
+        assert dr.dvfs_step_w == pytest.approx(prof.dvfs_step_w, abs=1.5)
+        assert dr.context_share_of_tax > 0.98
+
+
+def test_dose_response_detects_injected_slope():
+    """If VRAM power were real, the pipeline must find it (sensitivity)."""
+    import dataclasses
+    hot = dataclasses.replace(H100, beta_w_per_gb=0.5)
+    dr = run_simulated_dose_response(hot, seed=1)
+    assert dr.regression.slope == pytest.approx(0.5, abs=0.05)
+    assert not dr.tost.equivalent
+
+
+def test_ladder_covers_range():
+    lad = default_vram_ladder(64.0, n_levels=9)
+    assert lad[0] == 0.0 and lad[-1] == 64.0 and len(lad) == 9
+
+
+def test_phase1_pipeline():
+    ds = simulate_fleet(seed=7)
+    assert len(ds) == 336_226
+    idle = ds.idle_only()
+    assert len(idle) >= 335_000
+    res = analyze_fleet(ds)
+    assert 60 < res.context_effect_w < 85                # paper: 70.9
+    assert res.cohens_d > 4
+    assert abs(res.pooled_slope_w_per_gb) < 0.05
+    # per-device slope bound (paper section 8)
+    for g, reg in res.per_gpu_slopes.items():
+        assert abs(reg.slope) < 0.06, (g, reg.slope)

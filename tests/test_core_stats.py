@@ -1,0 +1,86 @@
+"""Unit + property tests for the statistics pipeline (paper sections 3-4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stats
+
+
+def test_ols_recovers_known_slope(rng):
+    x = np.linspace(0, 64, 40)
+    y = 3.0 + 0.5 * x + rng.normal(0, 0.01, size=40)
+    res = stats.ols(x, y)
+    assert abs(res.slope - 0.5) < 1e-2
+    assert abs(res.intercept - 3.0) < 0.05
+    assert res.ci_low < 0.5 < res.ci_high
+    assert res.p_value < 1e-10
+
+
+def test_ols_flat_has_high_p(rng):
+    x = np.linspace(0, 64, 40)
+    y = 100.0 + rng.normal(0, 0.1, size=40)
+    res = stats.ols(x, y)
+    assert abs(res.slope) < 0.01
+    assert res.p_value > 0.01
+
+
+def test_tost_bounds_flat_slope(rng):
+    x = np.linspace(0, 64, 80)
+    y = 100.0 + rng.normal(0, 0.1, size=80)
+    res = stats.ols(x, y)
+    t = stats.tost_slope(res, bound=0.1)
+    assert t.equivalent and t.p_tost < 0.05
+
+
+def test_tost_rejects_real_slope(rng):
+    x = np.linspace(0, 64, 80)
+    y = 100.0 + 0.5 * x + rng.normal(0, 0.1, size=80)
+    res = stats.ols(x, y)
+    t = stats.tost_slope(res, bound=0.1)
+    assert not t.equivalent
+
+
+def test_welch_cohens_matches_paper_scale(rng):
+    bare = rng.normal(74.7, 7.9, size=5000)
+    ctx = rng.normal(145.5, 11.2, size=5000)
+    r = stats.welch_cohens(bare, ctx)
+    assert 65 < r.diff < 76
+    assert 6.5 < r.cohens_d < 8.2           # paper: 7.3
+    assert r.p_value < 1e-100
+
+
+def test_effective_sample_size_eq6():
+    # paper: N ~ 335,267, tau 6-10 -> N_eff ~ 16k-26k
+    lo = stats.effective_sample_size(335_267, 10.0)
+    hi = stats.effective_sample_size(335_267, 6.0)
+    assert 15_000 < lo < 17_000
+    assert 25_000 < hi < 27_000
+
+
+def test_autocorr_time_detects_ar1(rng):
+    rho = np.exp(-1.0 / 8.0)
+    x = np.empty(20_000)
+    acc = 0.0
+    eps = rng.normal(0, 1, 20_000) * np.sqrt(1 - rho ** 2)
+    for i in range(20_000):
+        acc = rho * acc + eps[i]
+        x[i] = acc
+    tau = stats.autocorr_time(x)
+    assert 4.0 < tau < 14.0                 # integrated tau ~ 7.5 for rho
+
+
+@given(st.floats(1.0, 1e4), st.floats(0.0, 50.0))
+@settings(max_examples=50, deadline=None)
+def test_neff_never_exceeds_n(n_raw, tau):
+    n_raw = int(n_raw)
+    assert stats.effective_sample_size(n_raw, tau) <= n_raw
+
+
+@given(st.integers(5, 200), st.floats(-5, 5), st.floats(-2, 2))
+@settings(max_examples=30, deadline=None)
+def test_ols_exact_fit_property(n, intercept, slope):
+    x = np.arange(n, dtype=float)
+    y = intercept + slope * x
+    y[0] += 1e-9                             # avoid zero variance degeneracy
+    res = stats.ols(x, y)
+    assert abs(res.slope - slope) < 1e-6 + 1e-6 * abs(slope)

@@ -1,0 +1,100 @@
+"""Pallas kernel allclose sweeps vs. the pure-jnp oracles (interpret mode).
+
+Per assignment: for each kernel, sweep shapes/dtypes and
+assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+FLASH_SHAPES = [
+    # (B, H, Hkv, S, D)
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA 4:1
+    (1, 4, 1, 256, 128),     # MQA
+    (2, 2, 2, 512, 32),      # long-ish
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_attention_sweep(shape, dtype, window):
+    b, h, hkv, s, d = shape
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, s, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+DECODE_SHAPES = [
+    (1, 4, 4, 256, 64),
+    (2, 8, 2, 512, 64),
+    (4, 8, 1, 1024, 128),
+]
+
+
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(shape, dtype):
+    b, h, hkv, t, d = shape
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, t, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, t, d), dtype)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, t, size=b), jnp.int32)
+    got = ops.decode_attention(q, k, v, lengths)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_ignores_entries_past_length():
+    """Garbage beyond the frontier must not affect the output."""
+    b, h, hkv, t, d = 1, 4, 2, 256, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, t, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, t, d))
+    out1 = ops.decode_attention(q, k, v, jnp.array([100]))
+    k2 = k.at[:, :, 100:].set(1e4)
+    v2 = v.at[:, :, 100:].set(-1e4)
+    out2 = ops.decode_attention(q, k2, v2, jnp.array([100]))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 128, 128), (2, 256, 256),
+                                   (3, 384, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_sweep(shape, dtype):
+    b, s, w = shape
+    a = jax.random.uniform(jax.random.PRNGKey(0), (b, s, w), dtype,
+                           0.5, 0.999)
+    bx = jax.random.normal(jax.random.PRNGKey(1), (b, s, w), dtype)
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, w), dtype)
+    got = ops.rglru_scan(a, bx, h0)
+    want = ref.rglru_scan_ref(a, bx, h0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rglru_carries_initial_state():
+    b, s, w = 1, 128, 128
+    a = jnp.full((b, s, w), 0.9)
+    bx = jnp.zeros((b, s, w))
+    h0 = jnp.ones((b, w))
+    h = ops.rglru_scan(a, bx, h0)
+    np.testing.assert_allclose(np.asarray(h[:, 0]), 0.9, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h[:, -1]),
+                               0.9 ** s, rtol=1e-3)

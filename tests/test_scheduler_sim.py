@@ -1,0 +1,105 @@
+"""Breakeven model + eviction policy + simulator invariants (sections 5, 7)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (A100, H100, L40S, PYTORCH_70B, QWEN25_7B_MEASURED,
+                        LoaderSpec)
+from repro.core.breakeven import breakeven_seconds, critical_rate_per_hr
+from repro.core.scheduler import (AdaptiveBreakeven, AlwaysOn, Breakeven,
+                                  Clairvoyant, ExactBreakeven, FixedTTL)
+from repro.core.simulator import compare_policies, simulate
+from repro.core import traffic
+
+
+def test_breakeven_paper_values():
+    assert breakeven_seconds(PYTORCH_70B, H100) == pytest.approx(270.5, 1e-3)
+    assert breakeven_seconds(QWEN25_7B_MEASURED, H100) == \
+        pytest.approx(74.5, 1e-2)
+    assert critical_rate_per_hr(PYTORCH_70B, H100) == pytest.approx(13.3, 1e-2)
+    assert critical_rate_per_hr(PYTORCH_70B, A100) == pytest.approx(7.0, 1e-2)
+    assert critical_rate_per_hr(PYTORCH_70B, L40S) == pytest.approx(17.7, 1e-2)
+
+
+@given(st.floats(50.0, 400.0), st.floats(1.0, 120.0))
+@settings(max_examples=50, deadline=None)
+def test_breakeven_algebra(p_load, t_load):
+    """T* * lambda* == 3600 (Eq. 12 x Eq. 13), exact convention <= paper."""
+    ld = LoaderSpec("x", p_load, t_load)
+    t = breakeven_seconds(ld, H100)
+    lam = critical_rate_per_hr(ld, H100)
+    assert t * lam == pytest.approx(3600.0, rel=1e-9)
+    assert breakeven_seconds(ld, H100, paper_convention=False) <= t
+
+
+def test_always_on_energy_is_ctx_power():
+    arr = traffic.poisson(5.0, seed=0)
+    r = simulate(arr, AlwaysOn(), H100, PYTORCH_70B)
+    assert r.energy_wh == pytest.approx(H100.p_ctx_w * 24.0, rel=1e-6)
+    assert r.cold_starts == 1
+
+
+def test_policy_energy_ordering():
+    """Clairvoyant <= every online policy on every trace (lower bound)."""
+    for seed in range(3):
+        for gen in (lambda s: traffic.poisson(5.0, seed=s),
+                    lambda s: traffic.bursty(seed=s),
+                    lambda s: traffic.diurnal(seed=s)):
+            arr = gen(seed)
+            res = compare_policies(
+                arr, [AlwaysOn(), FixedTTL(300),
+                      Breakeven(PYTORCH_70B, H100),
+                      Clairvoyant(PYTORCH_70B, H100)], H100, PYTORCH_70B)
+            clair = res[-1].energy_wh
+            for r in res[:-1]:
+                assert clair <= r.energy_wh + 1e-6, (r.policy, seed)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_simulator_time_conservation(seed):
+    arr = traffic.poisson(8.0, seed=seed)
+    r = simulate(arr, Breakeven(PYTORCH_70B, H100), H100, PYTORCH_70B)
+    accounted = r.warm_idle_s + r.evicted_s + r.loading_s
+    # loading can push past the horizon by at most one load
+    assert accounted == pytest.approx(r.horizon_s, abs=PYTORCH_70B.t_load_s + 1)
+    assert r.energy_wh > 0
+    assert r.cold_starts >= 1
+
+
+def test_no_evictions_above_critical_rate():
+    """At rates far above lambda*, breakeven behaves like always-on."""
+    arr = traffic.poisson(120.0, seed=1)     # >> lambda* = 13.3/hr
+    be = simulate(arr, Breakeven(PYTORCH_70B, H100), H100, PYTORCH_70B)
+    ao = simulate(arr, AlwaysOn(), H100, PYTORCH_70B)
+    assert be.cold_starts <= 3
+    assert be.energy_wh == pytest.approx(ao.energy_wh, rel=0.02)
+
+
+def test_adaptive_beats_paper_policy_on_diurnal():
+    """The beyond-paper fix for the paper's section-8 oscillation issue."""
+    sav_paper, sav_adapt = [], []
+    for s in range(5):
+        arr = traffic.diurnal(seed=s)
+        base = simulate(arr, AlwaysOn(), H100, PYTORCH_70B)
+        p = simulate(arr, Breakeven(PYTORCH_70B, H100), H100, PYTORCH_70B)
+        a = simulate(arr, AdaptiveBreakeven(PYTORCH_70B, H100), H100,
+                     PYTORCH_70B)
+        sav_paper.append(p.savings_vs(base))
+        sav_adapt.append(a.savings_vs(base))
+    assert np.mean(sav_adapt) > np.mean(sav_paper)
+
+
+def test_clairvoyant_requires_future():
+    c = Clairvoyant(PYTORCH_70B, H100)
+    with pytest.raises(ValueError):
+        c.idle_timeout_s(0.0, next_gap_s=None)
+
+
+def test_traffic_generators_in_horizon():
+    for name, gen in traffic.PATTERNS.items():
+        arr = gen(seed=3)
+        assert np.all(arr >= 0) and np.all(arr < traffic.DAY), name
+        assert np.all(np.diff(arr) >= 0), name

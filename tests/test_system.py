@@ -1,0 +1,58 @@
+"""End-to-end behaviour tests for the paper's system: the full
+measurement -> model -> decision pipeline, run through the real
+components (no mocks)."""
+import numpy as np
+import pytest
+
+from repro.core import H100, PYTORCH_70B
+from repro.core.breakeven import breakeven_seconds
+from repro.core.doseresponse import run_simulated_dose_response
+from repro.core.scheduler import AlwaysOn, Breakeven
+from repro.core.simulator import simulate
+from repro.core import traffic
+
+
+def test_measure_then_decide_pipeline():
+    """The paper's whole point, end to end: measure a device's parking tax
+    via dose-response, derive T*, schedule with it, save energy."""
+    # 1. measure (Phase 2 protocol on the simulated oracle)
+    dr = run_simulated_dose_response(H100, seed=11)
+    assert dr.tost.equivalent                   # beta bounded ~ 0
+    measured_tax = dr.dvfs_step_w               # ~ 49.9 W
+
+    # 2. derive the breakeven from MEASURED hardware parameters
+    import dataclasses
+    measured_profile = dataclasses.replace(
+        H100, p_base_w=dr.bare_idle_w, p_ctx_w=dr.ctx_idle_w)
+    t_star = breakeven_seconds(PYTORCH_70B, measured_profile)
+    assert abs(t_star - 270.5) < 10.0           # paper: 4.5 min
+
+    # 3. schedule with it on a day of traffic; must beat always-on
+    arr = traffic.poisson(5.0, seed=0)
+    base = simulate(arr, AlwaysOn(), measured_profile, PYTORCH_70B)
+    be = simulate(arr, Breakeven(PYTORCH_70B, measured_profile),
+                  measured_profile, PYTORCH_70B)
+    savings = be.savings_vs(base)
+    assert 0.10 < savings < 0.35                # paper: 18.1% on steady
+
+    # 4. energy-conservation identity of the simulator:
+    #    base - be = evicted*(P_ctx - P_base) - loading*(P_load - P_ctx)
+    assert be.evicted_s * measured_tax / 3600.0 == pytest.approx(
+        base.energy_wh - be.energy_wh
+        + (be.loading_s / 3600.0) * (PYTORCH_70B.p_load_w
+                                     - measured_profile.p_ctx_w),
+        rel=0.05)
+
+
+def test_model_size_independence():
+    """Paper conclusion: a 1 GB and a 64 GB model pay the SAME parking tax;
+    T* depends on the loader, not the footprint."""
+    from repro.core.coldstart import LoaderSpec
+    fast_small = LoaderSpec("small", 150.0, 4.0)
+    fast_large = LoaderSpec("large", 150.0, 4.0)   # same loader profile
+    assert breakeven_seconds(fast_small, H100) == \
+        breakeven_seconds(fast_large, H100)
+    # small models reload faster -> shorter T* -> evict MORE aggressively
+    slow = LoaderSpec("slow", 300.0, 45.0)
+    assert breakeven_seconds(fast_small, H100) < \
+        breakeven_seconds(slow, H100)
