@@ -1,0 +1,66 @@
+"""Fleet bench: cluster-scale parking tax across heterogeneous GPUs.
+
+The headline table of the fleet subsystem: a mixed H100/A100/L40S fleet
+serving 10 models under a diurnal + bursty + heavy-tail traffic mix,
+comparing always-on warm-everywhere against routing x eviction x
+consolidation, with the clairvoyant lower bound as the floor.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_fleet [--fast]
+(--fast is the CI smoke mode: 4 models x 3 devices x 6 h.)
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit
+from repro.core.scheduler import AlwaysOn, Breakeven
+from repro.fleet import mixed_fleet_scenario, run_fleet
+
+
+def run_all(fast: bool = False) -> None:
+    kw = dict(n_models=4, fleet="h100+a100+l40s", horizon_s=6 * 3600.0) \
+        if fast else {}
+    tag = "fleet6h" if fast else "fleet24h"
+    base = run_fleet(mixed_fleet_scenario(AlwaysOn, "warm-first",
+                                          consolidate=False, **kw))
+    print(f"== Fleet ({'fast smoke' if fast else '10 models x 6 GPUs, 24 h'};"
+          f" {base.requests} requests) ==")
+    hdr = (f"   {'configuration':38s} {'Wh':>9s} {'save%':>6s} {'cold':>5s}"
+           f" {'migr':>5s} {'lat_s':>6s}")
+    print(hdr)
+
+    def report(name: str, res) -> None:
+        save = 100.0 * res.savings_vs(base)
+        print(f"   {name:38s} {res.energy_wh:9.1f} {save:6.1f}"
+              f" {res.cold_starts:5d} {res.migrations:5d}"
+              f" {res.mean_added_latency_s:6.2f}")
+        emit(f"{tag}.{name}.wh", f"{res.energy_wh:.1f}")
+        emit(f"{tag}.{name}.savings_pct", f"{save:.1f}")
+        emit(f"{tag}.{name}.cold_starts", str(res.cold_starts))
+        emit(f"{tag}.{name}.mean_added_latency_s",
+             f"{res.mean_added_latency_s:.2f}")
+
+    report("always-on_warm-everywhere", base)
+    for router in ("warm-first", "least-loaded", "energy-greedy",
+                   "breakeven-aware"):
+        for cons in (False, True):
+            name = f"breakeven_{router}" + ("_consolidate" if cons else "")
+            report(name, run_fleet(mixed_fleet_scenario(
+                Breakeven, router, consolidate=cons, **kw)))
+    report("always-on_consolidate", run_fleet(mixed_fleet_scenario(
+        AlwaysOn, "warm-first", consolidate=True, **kw)))
+
+    print(f"   {'clairvoyant shared-context bound':38s}"
+          f" {base.lb_shared_wh:9.1f} {100 * (1 - base.lb_shared_wh / base.energy_wh):6.1f}")
+    print(f"   {'per-model clairvoyant (no sharing)':38s}"
+          f" {base.cv_per_model_wh:9.1f}")
+    emit(f"{tag}.clairvoyant_lb.wh", f"{base.lb_shared_wh:.1f}")
+    print(f"   infra {base.infra_usd:.0f} USD/day (on-demand), baseline "
+          f"energy {base.energy_usd:.2f} USD, {base.carbon_kg:.1f} kgCO2e "
+          f"(USA mix; catalog estimates)")
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_csv
+    run_all(fast="--fast" in sys.argv)
+    print_csv()

@@ -1,9 +1,11 @@
-"""Benchmark entrypoint: `PYTHONPATH=src python -m benchmarks.run`.
+"""Benchmark entrypoint: `PYTHONPATH=src python -m benchmarks.run [--fast]`.
 
 Runs every paper-table reproduction (with tolerance gates), the
 beyond-paper policy study, the kernel microbenches, the live serving
-bench, and renders the roofline table from the dry-run results.  Ends
-with the machine-readable CSV (name,us_per_call,derived).
+bench, the fleet-orchestration bench, and renders the roofline table
+from the dry-run results.  Ends with the machine-readable CSV
+(name,us_per_call,derived).  ``--fast`` switches the fleet bench to its
+smoke scenario (CI mode).
 """
 from __future__ import annotations
 
@@ -11,11 +13,12 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_archs, bench_beyond, bench_kernels,
-                            bench_paper_tables, bench_roofline,
-                            bench_serving)
+    from benchmarks import (bench_archs, bench_beyond, bench_fleet,
+                            bench_kernels, bench_paper_tables,
+                            bench_roofline, bench_serving)
     from benchmarks.common import print_csv
 
+    fast = "--fast" in sys.argv
     print("#" * 72)
     print("# The Model Parking Tax -- reproduction + framework benchmarks")
     print("#" * 72)
@@ -24,6 +27,7 @@ def main() -> None:
     bench_archs.run_all()
     bench_kernels.run_all()
     bench_serving.run_all()
+    bench_fleet.run_all(fast=fast)
     bench_roofline.run_all()
     print("#" * 72)
     print_csv()

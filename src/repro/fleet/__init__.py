@@ -1,0 +1,28 @@
+"""Fleet orchestration: cluster-scale parking-tax simulation, placement,
+and routing across heterogeneous GPUs (see DESIGN in each module)."""
+from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
+                                 ElectricityMix, GPUSku, build_fleet,
+                                 carbon_kg, energy_cost_usd,
+                                 fleet_price_usd, get_mix, get_sku)
+from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
+from repro.fleet.router import (BreakevenRouter, Consolidator,
+                                EnergyGreedyRouter, LeastLoadedRouter,
+                                Move, ROUTERS, Router, WarmFirstRouter,
+                                get_router)
+from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
+                                  FleetScenario, clairvoyant_bound,
+                                  mixed_fleet_scenario, run_fleet,
+                                  single_device_scenario)
+
+__all__ = [
+    "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
+    "build_fleet", "carbon_kg", "energy_cost_usd", "fleet_price_usd",
+    "get_mix", "get_sku",
+    "Cluster", "FleetModelSpec", "RateEstimator",
+    "Router", "ROUTERS", "WarmFirstRouter", "LeastLoadedRouter",
+    "EnergyGreedyRouter", "BreakevenRouter", "Consolidator", "Move",
+    "get_router",
+    "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
+    "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
+    "clairvoyant_bound",
+]

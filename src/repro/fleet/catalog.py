@@ -1,0 +1,168 @@
+"""GPU fleet catalog: SKUs, capacity, prices, and electricity mixes.
+
+The fleet layer needs three things the per-device ``DeviceProfile`` does
+not carry: (1) capacity -- how many models a device can host (VRAM +
+runtime slots), (2) what an hour of the device costs, and (3) what a
+kWh drawn in some region costs in dollars and in carbon.  The shapes
+follow the two related repos: a cloud GPU catalog keyed by SKU with
+per-tier prices (dgx-cloud demo) and a per-zone electricity-mix
+repository (ecologits).
+
+Prices are representative public cloud list prices (USD per device-hour,
+mid-2026), NOT paper measurements: the bench reports relative numbers
+and clearly labels absolute dollars as catalog estimates.  Carbon
+intensities are grid yearly averages (kgCO2e/kWh); the USA value matches
+``repro.core.impact.US_GRID_KG_CO2_PER_KWH``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Sequence, Union
+
+from repro.core.power_model import DeviceProfile, get_profile
+
+
+# ---------------------------------------------------------------------------
+# Electricity mixes (ecologits idiom: one record per zone).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElectricityMix:
+    """Grid characteristics of one operating zone.
+
+    gwp_kg_per_kwh: Global Warming Potential of the mix (kgCO2eq/kWh).
+    usd_per_kwh:    industrial electricity price.
+    """
+    zone: str
+    gwp_kg_per_kwh: float
+    usd_per_kwh: float
+
+
+MIXES: Dict[str, ElectricityMix] = {
+    "WOR": ElectricityMix("WOR", 0.481, 0.14),   # world average
+    "USA": ElectricityMix("USA", 0.390, 0.12),   # matches core.impact
+    "DEU": ElectricityMix("DEU", 0.350, 0.26),
+    "FRA": ElectricityMix("FRA", 0.056, 0.18),
+    "SWE": ElectricityMix("SWE", 0.020, 0.10),
+}
+
+
+def get_mix(zone: str) -> ElectricityMix:
+    key = zone.upper()
+    if key not in MIXES:
+        raise KeyError(f"unknown electricity mix {zone!r}; have {sorted(MIXES)}")
+    return MIXES[key]
+
+
+def energy_cost_usd(energy_wh: float, mix: ElectricityMix) -> float:
+    return energy_wh / 1e3 * mix.usd_per_kwh
+
+
+def carbon_kg(energy_wh: float, mix: ElectricityMix) -> float:
+    return energy_wh / 1e3 * mix.gwp_kg_per_kwh
+
+
+# ---------------------------------------------------------------------------
+# SKUs (cloud-catalog idiom: capacity + per-tier device-hour prices).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GPUSku:
+    """One rentable accelerator model: power physics + capacity + price."""
+    key: str
+    profile: DeviceProfile
+    slots: int                       # max co-resident model contexts
+    usd_per_hr: float                # on-demand device-hour price
+    usd_per_hr_reserved: float
+    usd_per_hr_spot: float
+
+    @property
+    def vram_gb(self) -> float:
+        return self.profile.vram_capacity_gb
+
+    def price_usd_per_hr(self, tier: str = "on_demand") -> float:
+        try:
+            return {"on_demand": self.usd_per_hr,
+                    "reserved": self.usd_per_hr_reserved,
+                    "spot": self.usd_per_hr_spot}[tier]
+        except KeyError:
+            raise KeyError(f"unknown price tier {tier!r}") from None
+
+
+CATALOG: Dict[str, GPUSku] = {
+    "h100": GPUSku("h100", get_profile("h100"), slots=8,
+                   usd_per_hr=6.98, usd_per_hr_reserved=4.80,
+                   usd_per_hr_spot=2.90),
+    "a100": GPUSku("a100", get_profile("a100"), slots=8,
+                   usd_per_hr=4.10, usd_per_hr_reserved=3.20,
+                   usd_per_hr_spot=1.70),
+    "l40s": GPUSku("l40s", get_profile("l40s"), slots=6,
+                   usd_per_hr=1.90, usd_per_hr_reserved=1.40,
+                   usd_per_hr_spot=0.80),
+    "tpu_v5e": GPUSku("tpu_v5e", get_profile("tpu_v5e"), slots=2,
+                      usd_per_hr=1.20, usd_per_hr_reserved=0.94,
+                      usd_per_hr_spot=0.50),
+}
+
+
+def get_sku(key: str) -> GPUSku:
+    k = key.lower().replace("-", "_")
+    if k not in CATALOG:
+        raise KeyError(f"unknown SKU {key!r}; have {sorted(CATALOG)}")
+    return CATALOG[k]
+
+
+# ---------------------------------------------------------------------------
+# Fleet construction.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceInstance:
+    """One physical device in the fleet (SKU + stable identity)."""
+    instance_id: str
+    sku: GPUSku
+
+    @property
+    def profile(self) -> DeviceProfile:
+        return self.sku.profile
+
+
+_SPEC_PART = re.compile(r"^\s*(?:(\d+)\s*[xX]\s*)?([a-zA-Z0-9_\-]+)\s*$")
+
+
+def build_fleet(spec: Union[str, Sequence[str]]) -> List[DeviceInstance]:
+    """Build device instances from a spec like ``"2xh100+2xa100+2xl40s"``.
+
+    Also accepts a sequence of SKU keys (one instance each).  Instance
+    ids are ``<sku>-<i>`` and are stable across runs (deterministic
+    routing tie-breaks sort on them).
+    """
+    if isinstance(spec, str):
+        parts = [p for p in spec.split("+") if p.strip()]
+        if not parts:
+            raise ValueError(f"empty fleet spec {spec!r}")
+        expanded: List[str] = []
+        for part in parts:
+            m = _SPEC_PART.match(part)
+            if not m:
+                raise ValueError(f"bad fleet spec part {part!r}")
+            count = int(m.group(1) or 1)
+            expanded.extend([m.group(2)] * count)
+    else:
+        expanded = list(spec)
+    counters: Dict[str, int] = {}
+    out: List[DeviceInstance] = []
+    for key in expanded:
+        sku = get_sku(key)
+        i = counters.get(sku.key, 0)
+        counters[sku.key] = i + 1
+        out.append(DeviceInstance(instance_id=f"{sku.key}-{i}", sku=sku))
+    return out
+
+
+def fleet_price_usd(devices: Sequence[DeviceInstance], horizon_s: float,
+                    tier: str = "on_demand") -> float:
+    """Infrastructure (rental) cost of holding the fleet for the horizon."""
+    hours = horizon_s / 3600.0
+    return sum(d.sku.price_usd_per_hr(tier) for d in devices) * hours

@@ -1,0 +1,316 @@
+"""Cluster: N per-device ModelManagers on ONE SimClock, fleet accounting.
+
+The cluster owns the pieces the single-device serving layer cannot
+express:
+
+  * a fleet-wide model registry (a model may have replicas on any
+    device; each replica gets its own policy instance and an
+    architecture-specific ``LoaderSpec`` derived from checkpoint bytes,
+    so t_load/T* differ per device),
+  * a global eviction-aware time advance (``advance_to`` walks every
+    device's armed idle timeouts in time order, so a parked model on
+    device B falls to bare at the right instant even while device A is
+    mid-load),
+  * migration (unload on the source, split-phase load on the target --
+    the physical reason consolidation saves energy is that the DVFS
+    step is per-DEVICE: one context keeps the clocks up, so packing
+    parked models onto fewer devices lets drained devices fall back to
+    ``p_base_w``),
+  * per-model arrival-rate estimation (EWMA) feeding the energy-aware
+    routers and the consolidation benefit model.
+
+Energy invariant: fleet energy is exactly the sum of the per-device
+EnergyMeter totals -- there is no separate fleet meter to drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import math
+from typing import Callable, Dict, List, Optional
+
+from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
+from repro.core.scheduler import Policy
+from repro.fleet.catalog import DeviceInstance
+from repro.serving.energy import SimClock
+from repro.serving.model_manager import ManagedModel, ModelManager
+
+
+def _make_policy(factory: Callable[..., Policy], loader: LoaderSpec,
+                 profile) -> Policy:
+    """Instantiate a per-replica policy, feeding the replica's loader and
+    device profile to factories that want them."""
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return factory()
+    kwargs = {}
+    if "loader" in params:
+        kwargs["loader"] = loader
+    if "profile" in params:
+        kwargs["profile"] = profile
+    return factory(**kwargs)
+
+
+class RateEstimator:
+    """Time-aware EWMA of a model's inter-arrival gap (fleet-level lambda-hat)."""
+
+    def __init__(self, halflife_s: float = 1800.0):
+        self.halflife_s = halflife_s
+        self.last_arrival: Optional[float] = None
+        self.gap_s: Optional[float] = None
+
+    def observe(self, t_s: float) -> None:
+        if self.last_arrival is not None:
+            g = max(t_s - self.last_arrival, 1e-9)
+            if self.gap_s is None:
+                self.gap_s = g
+            else:
+                alpha = 1.0 - 0.5 ** (g / self.halflife_s)
+                self.gap_s += alpha * (g - self.gap_s)
+        self.last_arrival = t_s
+
+    def expected_gap_s(self, default: float = 3600.0) -> float:
+        return self.gap_s if self.gap_s is not None else default
+
+    def expected_next_arrival(self, now_s: float,
+                              default_gap_s: float = 3600.0) -> float:
+        if self.last_arrival is None:
+            return now_s + default_gap_s
+        return max(self.last_arrival + self.expected_gap_s(default_gap_s),
+                   now_s)
+
+
+@dataclasses.dataclass
+class FleetModelSpec:
+    """Cluster-level model registration (replicas instantiate from this)."""
+    model_id: str
+    policy_factory: Callable[[], Policy]
+    loader: Optional[LoaderSpec] = None      # fixed loader on every device
+    checkpoint_bytes: Optional[int] = None   # else derived per device
+    vram_gb: float = 0.0
+    home: Optional[str] = None               # device to prewarm on at t=0
+
+    def __post_init__(self):
+        if self.loader is None and self.checkpoint_bytes is None:
+            raise ValueError(f"{self.model_id}: need loader or checkpoint_bytes")
+
+
+class Cluster:
+    def __init__(self, devices: List[DeviceInstance], *,
+                 clock: Optional[SimClock] = None):
+        if not devices:
+            raise ValueError("empty fleet")
+        self.clock = clock or SimClock()
+        self.devices: Dict[str, DeviceInstance] = {
+            d.instance_id: d for d in devices}
+        if len(self.devices) != len(devices):
+            raise ValueError("duplicate instance_id in fleet")
+        self.managers: Dict[str, ModelManager] = {
+            did: ModelManager(d.profile, clock=self.clock)
+            for did, d in self.devices.items()}
+        self.specs: Dict[str, FleetModelSpec] = {}
+        self.rates: Dict[str, RateEstimator] = {}
+        self._loaders: Dict[tuple, LoaderSpec] = {}
+        self.migrations = 0
+
+    # -- registry -----------------------------------------------------------
+    def register_model(self, spec: FleetModelSpec) -> None:
+        self.specs[spec.model_id] = spec
+        self.rates[spec.model_id] = RateEstimator()
+
+    def loader_for(self, model_id: str, device_id: str) -> LoaderSpec:
+        """Per-(model, device) LoaderSpec: this is what makes routing
+        architecture-aware -- t_load scales with the device's ingest
+        bandwidth, so T* and the cold-start cost differ per SKU."""
+        key = (model_id, device_id)
+        if key not in self._loaders:
+            spec = self.specs[model_id]
+            if spec.loader is not None:
+                self._loaders[key] = spec.loader
+            else:
+                self._loaders[key] = loader_from_checkpoint(
+                    model_id, spec.checkpoint_bytes,
+                    self.devices[device_id].profile)
+        return self._loaders[key]
+
+    def replica(self, device_id: str, model_id: str) -> ManagedModel:
+        """Get (lazily creating) the per-device replica of a model.
+
+        The policy factory is called with ``loader=``/``profile=`` when
+        its signature accepts them, so architecture-dependent policies
+        (Breakeven and friends -- pass the CLASS as the factory) get
+        each replica's own T*."""
+        mm = self.managers[device_id]
+        if model_id not in mm.models:
+            spec = self.specs[model_id]
+            loader = self.loader_for(model_id, device_id)
+            policy = _make_policy(spec.policy_factory, loader,
+                                  self.devices[device_id].profile)
+            mm.register(model_id, policy=policy, loader=loader,
+                        vram_gb=spec.vram_gb)
+        return mm.models[model_id]
+
+    # -- state queries -------------------------------------------------------
+    def locations(self, model_id: str, *, include_loading: bool = True
+                  ) -> List[str]:
+        out = []
+        for did, mm in self.managers.items():
+            m = mm.models.get(model_id)
+            if m is not None and (m.resident or
+                                  (include_loading and m.loading)):
+                out.append(did)
+        return sorted(out)
+
+    def context_on(self, device_id: str) -> bool:
+        mm = self.managers[device_id]
+        return any(m.resident or m.loading for m in mm.models.values())
+
+    def occupancy(self, device_id: str) -> int:
+        mm = self.managers[device_id]
+        return sum(1 for m in mm.models.values() if m.resident or m.loading)
+
+    def free_slots(self, device_id: str) -> int:
+        return self.devices[device_id].sku.slots - self.occupancy(device_id)
+
+    def free_vram_gb(self, device_id: str) -> float:
+        mm = self.managers[device_id]
+        return self.devices[device_id].sku.vram_gb - mm.vram_used_gb()
+
+    def fits(self, device_id: str, model_id: str) -> bool:
+        return (self.free_slots(device_id) >= 1
+                and self.free_vram_gb(device_id)
+                >= self.specs[model_id].vram_gb)
+
+    def idle_power_w(self) -> float:
+        """Instantaneous fleet idle power from context state (Eq. 1 summed
+        over devices; loading/active bursts excluded by design -- this is
+        the steady-state quantity consolidation optimizes)."""
+        total = 0.0
+        for did, dev in self.devices.items():
+            total += dev.profile.idle_power_w(self.context_on(did))
+        return total
+
+    # -- time ---------------------------------------------------------------
+    def advance_to(self, target_s: float) -> None:
+        """Advance the shared clock, applying every device's armed idle
+        timeouts in time order on the way.
+
+        A deadline landing EXACTLY on the target stays armed: the
+        single-device simulator keeps a model warm when the idle gap
+        equals the timeout (`stay < gap` is strict), and the arriving
+        event at `target_s` re-arms or supersedes it."""
+        while True:
+            pending = [m.evict_at
+                       for mm in self.managers.values()
+                       for m in mm.models.values()
+                       if m.resident and math.isfinite(m.evict_at)
+                       and m.evict_at < target_s]
+            if not pending:
+                break
+            t_evt = min(pending)
+            self.clock.advance(max(t_evt - self.clock(), 0.0))
+            for mm in self.managers.values():
+                mm.tick()
+        self.clock.advance(max(target_s - self.clock(), 0.0))
+
+    # -- request-path primitives (the fleet event loop sequences these) -----
+    def observe_arrival(self, model_id: str, device_id: str, t_s: float
+                        ) -> None:
+        """Feed one arrival to the fleet rate estimator AND the routed
+        replica's policy (at the true arrival time, as the single-device
+        simulator does)."""
+        self.rates[model_id].observe(t_s)
+        self.replica(device_id, model_id).policy.observe_arrival(t_s)
+
+    def start_load(self, device_id: str, model_id: str) -> float:
+        """Begin a split-phase load; returns its duration.  Evicts idle
+        parked models first if the device is over capacity."""
+        self.replica(device_id, model_id)
+        self.make_room(device_id, model_id)
+        return self.managers[device_id].begin_load(model_id)
+
+    def finish_load(self, device_id: str, model_id: str) -> None:
+        self.managers[device_id].finish_load(model_id)
+        self.managers[device_id].arm(model_id)
+
+    def begin_serve(self, device_id: str, model_id: str, arrival_s: float,
+                    *, service_s: float = 0.0) -> None:
+        m = self.replica(device_id, model_id)
+        m.requests += 1
+        m.added_latency_s += max(self.clock() - arrival_s, 0.0)
+        m.evict_at = math.inf          # never evict mid-service
+        if service_s > 0:
+            self.managers[device_id].meter.transition("active")
+
+    def end_serve(self, device_id: str, model_id: str) -> None:
+        mm = self.managers[device_id]
+        mm.settle()
+        m = mm.models[model_id]
+        m.pins = max(0, m.pins - 1)
+        if m.resident:
+            if m.pins > 0:
+                m.evict_at = math.inf     # more queued demand: stay pinned
+            else:
+                mm.arm(model_id)
+
+    def preview_timeout_s(self, model_id: str, device_id: str,
+                          now_s: float) -> float:
+        """Idle timeout a replica of this model would arm on this device,
+        WITHOUT registering it (the consolidation planner speculates over
+        candidate targets and must not mutate managers)."""
+        mm = self.managers[device_id]
+        m = mm.models.get(model_id)
+        if m is not None:
+            return m.policy.idle_timeout_s(now_s)
+        spec = self.specs[model_id]
+        policy = _make_policy(spec.policy_factory,
+                              self.loader_for(model_id, device_id),
+                              self.devices[device_id].profile)
+        return policy.idle_timeout_s(now_s)
+
+    def make_room(self, device_id: str, model_id: str) -> None:
+        """Best-effort capacity enforcement: unload parked-idle models
+        (soonest-to-evict first) until the new model fits.  In-flight
+        (loading) models are never touched."""
+        mm = self.managers[device_id]
+        need_gb = self.specs[model_id].vram_gb
+        sku = self.devices[device_id].sku
+
+        def over() -> bool:
+            used = mm.vram_used_gb()
+            occ = self.occupancy(device_id)
+            return (used + need_gb > sku.vram_gb or occ + 1 > sku.slots)
+
+        victims = sorted(
+            (m for m in mm.models.values()
+             if m.resident and m.model_id != model_id and m.pins == 0),
+            key=lambda m: m.evict_at)
+        for v in victims:
+            if not over():
+                break
+            mm.unload(v.model_id)
+
+    # -- migration ----------------------------------------------------------
+    def start_migration(self, model_id: str, src_id: str, dst_id: str
+                        ) -> float:
+        """Unload from src, begin the (split-phase) load on dst; returns
+        the load duration.  The caller owns scheduling finish_load."""
+        src = self.managers[src_id]
+        exported_engine = None
+        m_src = src.models.get(model_id)
+        if m_src is not None and m_src.resident:
+            exported_engine = m_src.engine
+        src.unload(model_id)
+        dst_m = self.replica(dst_id, model_id)
+        if dst_m.load_fn is None and exported_engine is not None:
+            dst_m.engine = exported_engine
+        self.migrations += 1
+        return self.start_load(dst_id, model_id)
+
+    # -- reporting ----------------------------------------------------------
+    def device_totals(self) -> Dict[str, Dict[str, float]]:
+        """Per-device energy (Wh by meter state incl. 'total'); flushes
+        meters to 'now'."""
+        return {did: mm.meter.totals()
+                for did, mm in self.managers.items()}

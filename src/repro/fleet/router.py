@@ -1,0 +1,277 @@
+"""Request routing + consolidation across a heterogeneous fleet.
+
+Routing answers: which device serves the next request for model m?
+The strategies span the design space the paper's cluster-scale question
+opens:
+
+  * warm-first      -- never cold-start when a warm replica exists;
+                       placement falls back to least-loaded.
+  * least-loaded    -- classic load balancing, blind to warmth (the
+                       baseline that shows why energy-aware routing
+                       matters: it sprays cold starts).
+  * energy-greedy   -- myopic joules: place a cold model where
+                       (above-bare load energy + marginal parking
+                       energy until the expected next arrival) is
+                       minimal.  "Marginal" is the key word: a device
+                       that already has a live context has paid its
+                       DVFS step, so packing there parks for free.
+  * breakeven-aware -- architecture-aware steady state: adds the
+                       per-arrival-period ski-rental cost
+                       min(step * E[gap], reload) so models with
+                       sub-breakeven traffic land on low-step devices
+                       (A100) and hot models on fast-loading ones.
+
+Consolidation is the placement half: periodically migrate parked models
+off lightly-packed devices onto already-on devices with room, so the
+drained device falls back to ``p_base_w``.  The benefit side of the
+cost test is exact, not estimated: without the migration the source
+keeps its context until its LAST armed idle timeout fires, so draining
+it now saves ``dvfs_step_w * (max evict_at - now)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.breakeven import breakeven_seconds
+from repro.fleet.cluster import Cluster
+
+
+def _above_base_load_j(cluster: Cluster, model_id: str, device_id: str
+                       ) -> float:
+    ld = cluster.loader_for(model_id, device_id)
+    prof = cluster.devices[device_id].profile
+    return max(ld.p_load_w - prof.p_base_w, 0.0) * ld.t_load_s
+
+
+class Router:
+    """Picks a device for one request; stateless across requests (all
+    adaptivity lives in the cluster's rate estimators)."""
+
+    name = "base"
+
+    def choose(self, model_id: str, t_s: float, cluster: Cluster) -> str:
+        raise NotImplementedError
+
+    # -- shared helpers -----------------------------------------------------
+    def _placeable(self, model_id: str, cluster: Cluster) -> List[str]:
+        fits = [did for did in sorted(cluster.devices)
+                if cluster.fits(did, model_id)]
+        return fits or sorted(cluster.devices)   # overflow: best effort
+
+    def _least_loaded(self, model_id: str, cluster: Cluster) -> str:
+        return min(self._placeable(model_id, cluster),
+                   key=lambda did: (cluster.occupancy(did),
+                                    -cluster.free_vram_gb(did), did))
+
+    def _warm(self, model_id: str, cluster: Cluster) -> Optional[str]:
+        locs = cluster.locations(model_id, include_loading=True)
+        return locs[0] if locs else None
+
+    def _joule_score(self, model_id: str, cluster: Cluster, *,
+                     steady_state: bool):
+        """Scoring key for cold placement, shared by the energy-aware
+        routers: above-bare load energy + MARGINAL parking energy until
+        the expected next arrival (a context-on device has already paid
+        its DVFS step, so packing there parks for free).  With
+        ``steady_state`` the per-arrival-period ski-rental cost
+        min(step * E[gap], reload) is added, making low-step devices win
+        for sub-breakeven traffic."""
+        gap = cluster.rates[model_id].expected_gap_s()
+
+        def score(did: str) -> Tuple[float, str]:
+            prof = cluster.devices[did].profile
+            ld = cluster.loader_for(model_id, did)
+            load_j = _above_base_load_j(cluster, model_id, did)
+            step_w = 0.0 if cluster.context_on(did) else prof.dvfs_step_w
+            t_star = breakeven_seconds(ld, prof, paper_convention=False)
+            park_j = step_w * min(gap, t_star)
+            if steady_state:
+                return (load_j + min(step_w * gap, load_j + park_j), did)
+            return (load_j + park_j, did)
+
+        return score
+
+
+class WarmFirstRouter(Router):
+    name = "warm-first"
+
+    def choose(self, model_id, t_s, cluster) -> str:
+        warm = self._warm(model_id, cluster)
+        if warm is not None:
+            return warm
+        return self._least_loaded(model_id, cluster)
+
+
+class LeastLoadedRouter(Router):
+    name = "least-loaded"
+
+    def choose(self, model_id, t_s, cluster) -> str:
+        return self._least_loaded(model_id, cluster)
+
+
+class EnergyGreedyRouter(Router):
+    """Myopic joules for the imminent cold start + park-until-next-arrival."""
+
+    name = "energy-greedy"
+    steady_state = False
+
+    def choose(self, model_id, t_s, cluster) -> str:
+        warm = self._warm(model_id, cluster)
+        if warm is not None:
+            return warm
+        return min(self._placeable(model_id, cluster),
+                   key=self._joule_score(model_id, cluster,
+                                         steady_state=self.steady_state))
+
+
+class BreakevenRouter(EnergyGreedyRouter):
+    """Architecture-aware breakeven routing (ISSUE tentpole variant):
+    immediate load cost + expected per-period ski-rental cost, so the
+    device whose (dvfs_step_w, t_load) pair minimizes expected joules
+    wins even when every candidate is currently bare."""
+
+    name = "breakeven-aware"
+    steady_state = True
+
+
+ROUTERS = {r.name: r for r in
+           (WarmFirstRouter(), LeastLoadedRouter(), EnergyGreedyRouter(),
+            BreakevenRouter())}
+
+
+def get_router(name: str) -> Router:
+    if name not in ROUTERS:
+        raise KeyError(f"unknown router {name!r}; have {sorted(ROUTERS)}")
+    return ROUTERS[name]
+
+
+# ---------------------------------------------------------------------------
+# Consolidation (placement pass).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Move:
+    model_id: str
+    src: str
+    dst: str
+
+
+class Consolidator:
+    """Periodic packing pass: drain whole devices whose parked residents
+    fit elsewhere, whenever the counterfactual saving beats the cost.
+
+    Saving: without the migration the source keeps its context until its
+    LAST armed idle timeout fires -- ``src dvfs_step_w * (last evict_at
+    - now)``.  Cost: the above-bare migration load energy PLUS the
+    destination-side context extension: the migrated replica re-arms a
+    fresh timeout on the target, which can keep the target's (possibly
+    larger) DVFS step up beyond the window its own residents had armed.
+    All windows are capped at ``lookahead_s`` so always-on (infinite)
+    timeouts compare finitely.  Draining is all-or-nothing per source
+    device -- a partial move saves nothing, the source's context stays
+    up for the models left behind."""
+
+    def __init__(self, *, period_s: float = 900.0, margin: float = 1.0,
+                 lookahead_s: float = 2 * 3600.0):
+        if period_s <= 0:
+            raise ValueError("period must be positive")
+        self.period_s = period_s
+        self.margin = margin     # require benefit >= margin * cost
+        self.lookahead_s = lookahead_s
+
+    def plan(self, cluster: Cluster, now_s: float,
+             busy: Optional[dict] = None) -> List[Move]:
+        """Propose migrations; never increases instantaneous fleet idle
+        power (targets are already context-on, sources fully drain).
+        ``busy`` maps device_id -> busy flag; busy devices are skipped
+        on both sides."""
+        busy = busy or {}
+        free_slots = {did: cluster.free_slots(did)
+                      for did in cluster.devices}
+        free_vram = {did: cluster.free_vram_gb(did)
+                     for did in cluster.devices}
+        on = {did for did in cluster.devices if cluster.context_on(did)}
+
+        # drain low-occupancy, high-step sources first
+        sources = sorted(
+            (did for did in on if not busy.get(did)),
+            key=lambda did: (cluster.occupancy(did),
+                             -cluster.devices[did].profile.dvfs_step_w, did))
+        horizon = now_s + self.lookahead_s
+
+        def cap(t: float) -> float:
+            return min(t, horizon)
+
+        # per-target context window: how long its OWN residents keep the
+        # step up regardless of what we pack onto it
+        win = {did: max((m.evict_at
+                         for m in cluster.managers[did].models.values()
+                         if m.resident), default=now_s)
+               for did in cluster.devices}
+
+        moves: List[Move] = []
+        drained = set()
+        for src in sources:
+            mm = cluster.managers[src]
+            residents = [m for m in mm.models.values() if m.resident]
+            if not residents or any(m.loading for m in mm.models.values()):
+                continue
+            # counterfactual: src pays its step until the last armed
+            # timeout fires (capped so always-on compares finitely)
+            last_evict = max(m.evict_at for m in residents)
+            targets = [did for did in sorted(on - drained - {src})
+                       if not busy.get(did)]
+            assignment: List[Move] = []
+            cost_j = 0.0
+            slots = dict(free_slots)
+            vram = dict(free_vram)
+            trial_win = dict(win)
+            # loads serialize on each destination's queue; track when
+            # each target frees up so multi-model drains are priced at
+            # their real start/finish times, not all at `now`
+            dst_free = {did: now_s for did in targets}
+            last_start = now_s      # src keeps its step until the last
+            ok = True               # resident unloads (migration start)
+            for m in sorted(residents, key=lambda r: -r.vram_gb):
+                placed = False
+                for dst in sorted(targets,
+                                  key=lambda d: (-vram[d], d)):
+                    if slots[dst] >= 1 and vram[dst] >= m.vram_gb:
+                        assignment.append(Move(m.model_id, src, dst))
+                        ld = cluster.loader_for(m.model_id, dst)
+                        cost_j += _above_base_load_j(cluster, m.model_id,
+                                                     dst)
+                        # destination-side extension: the migrated
+                        # replica re-arms on dst and may hold dst's step
+                        # up past its own residents' window
+                        t_start = dst_free[dst]
+                        t_done = t_start + ld.t_load_s
+                        dst_free[dst] = t_done
+                        last_start = max(last_start, t_start)
+                        timeout = cluster.preview_timeout_s(
+                            m.model_id, dst, t_done)
+                        armed_end = t_done + timeout
+                        step_dst = cluster.devices[dst].profile.dvfs_step_w
+                        cost_j += step_dst * max(
+                            0.0, cap(armed_end) - cap(max(trial_win[dst],
+                                                          now_s)))
+                        trial_win[dst] = max(trial_win[dst], armed_end)
+                        slots[dst] -= 1
+                        vram[dst] -= m.vram_gb
+                        placed = True
+                        break
+                if not placed:
+                    ok = False
+                    break
+            if not ok or not assignment:
+                continue
+            # realized benefit starts when the LAST resident leaves src
+            benefit_j = (cluster.devices[src].profile.dvfs_step_w
+                         * max(0.0, cap(last_evict) - cap(last_start)))
+            if benefit_j >= self.margin * cost_j:
+                moves.extend(assignment)
+                drained.add(src)
+                free_slots, free_vram = slots, vram
+                win = trial_win
+        return moves

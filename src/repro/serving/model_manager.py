@@ -12,6 +12,12 @@ Node-failure handling: ``fail()`` simulates a device loss -- resident
 models drop, the meter resets to bare, and the next request transparently
 reloads (the serving-side analogue of checkpoint/restart; see
 tests/test_serving.py).
+
+Fleet hooks (repro.fleet): loads are split-phase (``begin_load`` /
+``finish_load``) so a cluster event loop can interleave other devices'
+evictions with an in-flight load, and ``unload`` / ``export_model`` /
+``prewarm`` give the consolidation pass the migration primitives it
+needs.  ``handle_request`` keeps the original blocking behaviour.
 """
 from __future__ import annotations
 
@@ -35,7 +41,10 @@ class ManagedModel:
     load_fn: Optional[Callable[[], Any]] = None   # returns engine/params
     engine: Any = None
     resident: bool = False
+    loading: bool = False
+    vram_gb: float = 0.0                          # capacity accounting only
     evict_at: float = math.inf
+    pins: int = 0          # queued demand holding the model (fleet layer)
     cold_starts: int = 0
     requests: int = 0
     added_latency_s: float = 0.0
@@ -53,7 +62,8 @@ class ModelManager:
     def register(self, model_id: str, *, policy: Policy,
                  loader: Optional[LoaderSpec] = None,
                  checkpoint_bytes: Optional[int] = None,
-                 load_fn: Optional[Callable[[], Any]] = None) -> ManagedModel:
+                 load_fn: Optional[Callable[[], Any]] = None,
+                 vram_gb: float = 0.0) -> ManagedModel:
         if loader is None:
             if checkpoint_bytes is None:
                 raise ValueError("need loader or checkpoint_bytes")
@@ -61,30 +71,102 @@ class ModelManager:
                                             self.profile)
         policy.reset()
         m = ManagedModel(model_id=model_id, loader=loader, policy=policy,
-                         load_fn=load_fn)
+                         load_fn=load_fn, vram_gb=vram_gb)
         self.models[model_id] = m
         return m
 
     def _any_resident(self) -> bool:
         return any(m.resident for m in self.models.values())
 
+    def resident_ids(self) -> List[str]:
+        return [mid for mid, m in self.models.items() if m.resident]
+
+    def vram_used_gb(self) -> float:
+        return sum(m.vram_gb for m in self.models.values()
+                   if m.resident or m.loading)
+
     # -- lifecycle ------------------------------------------------------------
-    def _load(self, m: ManagedModel) -> None:
+    def begin_load(self, model_id: str) -> float:
+        """Enter the loading state WITHOUT advancing time; returns t_load.
+
+        The fleet event loop uses the split-phase form so evictions on
+        other devices (sharing this SimClock) land mid-load at the right
+        instant."""
+        m = self.models[model_id]
+        m.loading = True
+        self.meter.transition("loading", power_override_w=m.loader.p_load_w)
+        return m.loader.t_load_s
+
+    def finish_load(self, model_id: str) -> None:
+        m = self.models[model_id]
         m.cold_starts += 1
-        self.meter.transition("loading",
-                              power_override_w=m.loader.p_load_w)
-        self.clock.advance(m.loader.t_load_s)
         if m.load_fn is not None:
             m.engine = m.load_fn()
+        m.loading = False
         m.resident = True
         self.meter.transition("parked")
+
+    def _load(self, m: ManagedModel) -> None:
+        self.begin_load(m.model_id)
+        self.clock.advance(m.loader.t_load_s)
+        self.finish_load(m.model_id)
 
     def _evict(self, m: ManagedModel) -> None:
         m.engine = None                      # frees device buffers
         m.resident = False
         m.evict_at = math.inf
-        if not self._any_resident():
+        # only fall to bare from parked: mid-load/mid-service the burst
+        # power keeps metering until that phase closes
+        if not self._any_resident() and self.meter.state == "parked":
             self.meter.transition("bare")
+
+    def unload(self, model_id: str) -> bool:
+        """Graceful unload hook (fleet migration): evict now, regardless
+        of the armed idle timeout.  Returns whether it was resident."""
+        m = self.models[model_id]
+        if m.loading:
+            raise RuntimeError(
+                f"cannot unload {model_id!r}: split-phase load in flight "
+                f"(finish_load it first)")
+        was = m.resident
+        if was:
+            self._evict(m)
+        return was
+
+    def export_model(self, model_id: str) -> ManagedModel:
+        """Unload and remove from the registry, returning the record so a
+        migration can re-home the model (engine handle, loader, stats)."""
+        self.unload(model_id)
+        return self.models.pop(model_id)
+
+    def prewarm(self, model_id: str, *, count_cold_start: bool = True) -> None:
+        """Make a model resident NOW without charging load energy/time.
+
+        This is the simulator's ``start_warm`` convention (paper Table 6
+        counts the initial load as 1 cold start but starts the horizon
+        warm); the fleet uses it for warm-everywhere baselines."""
+        m = self.models[model_id]
+        if m.resident:
+            return
+        if m.load_fn is not None:
+            m.engine = m.load_fn()
+        m.resident = True
+        if count_cold_start:
+            m.cold_starts += 1
+        self.meter.transition("parked")
+        self.arm(model_id)
+
+    def arm(self, model_id: str) -> None:
+        """(Re)arm a model's idle-eviction deadline from its policy."""
+        m = self.models[model_id]
+        timeout = m.policy.idle_timeout_s(self.clock())
+        m.evict_at = self.clock() + timeout if math.isfinite(timeout) \
+            else math.inf
+
+    def settle(self) -> None:
+        """Close the current burst phase (load/serve): fall to parked or
+        bare according to residency."""
+        self.meter.transition("parked" if self._any_resident() else "bare")
 
     def tick(self) -> None:
         """Apply due evictions at the current sim time."""
@@ -100,7 +182,9 @@ class ModelManager:
         for m in self.models.values():
             m.engine = None
             m.resident = False
+            m.loading = False
             m.evict_at = math.inf
+            m.pins = 0
         self.meter.transition("bare")
 
     # -- request path --------------------------------------------------------
@@ -127,9 +211,7 @@ class ModelManager:
                 result = work_fn(m.engine)
             self.clock.advance(service_s)
         self.meter.transition("parked")
-        timeout = m.policy.idle_timeout_s(self.clock())
-        m.evict_at = self.clock() + timeout if math.isfinite(timeout) \
-            else math.inf
+        self.arm(model_id)
         return result
 
     def run_trace(self, model_id: str, arrivals_s: List[float], *,

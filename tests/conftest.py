@@ -1,3 +1,11 @@
+import os
+
+# Tier-1 runs tiny reduced configs on CPU where jit COMPILE time, not
+# compute, dominates: trade optimized codegen for much faster builds.
+# Must be set before the first jax backend initialization; respects a
+# caller's explicit XLA_FLAGS.
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")
+
 import numpy as np
 import pytest
 

@@ -1,7 +1,10 @@
 """Unit + property tests for the statistics pipeline (paper sections 3-4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional extra: property tests skip, rest run
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import stats
 

@@ -12,6 +12,14 @@ from repro.models import (RunFlags, build_cache_specs, build_param_specs,
 
 FLAGS = RunFlags(remat="none")
 
+# Tier-1 compiles three representative families (encoder-decoder dense,
+# GQA dense, MoE+sliding-window); the remaining archs are the same code
+# paths with different hyperparameters and run under `-m slow`.
+FAST_ARCHS = ("whisper-base", "qwen2-5-7b", "mixtral-8x22b")
+SMOKE_ARCHS = [a if a in FAST_ARCHS
+               else pytest.param(a, marks=pytest.mark.slow)
+               for a in ARCHS]
+
 
 def _batch(cfg, key, b=2, s=16):
     tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
@@ -36,7 +44,7 @@ def test_full_config_validates(arch):
     assert cfg.active_param_count() <= cfg.param_count()
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
 def test_reduced_smoke_train_step(arch):
     cfg = get_reduced(arch)
     key = jax.random.PRNGKey(0)
@@ -50,7 +58,7 @@ def test_reduced_smoke_train_step(arch):
     assert np.isfinite(gn) and gn > 0, arch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
 def test_reduced_smoke_prefill_decode(arch):
     cfg = get_reduced(arch)
     key = jax.random.PRNGKey(0)
@@ -184,6 +192,7 @@ def test_int8_kv_cache_decode_close_to_bf16():
     assert (jnp.argmax(d16, -1) == jnp.argmax(d8, -1)).all()
 
 
+@pytest.mark.slow
 def test_materialize_is_process_stable():
     """Init keys must not depend on Python's salted hash(): a leaf's
     value is a pure function of (seed, path) -- crc32-derived."""
@@ -196,13 +205,20 @@ def test_materialize_is_process_stable():
         "p = materialize(build_param_specs(cfg), jax.random.PRNGKey(0));"
         "leaf = jax.tree_util.tree_leaves(p)[3];"
         "print(float(np.asarray(leaf).ravel()[0]))")
+    import os
     outs = set()
     for seed_env in ("1", "2"):
+        # keep JAX_PLATFORMS: without it jax's platform discovery probes
+        # for accelerators in the bare subprocess env and hangs; keep
+        # XLA_FLAGS so the child compiles as cheaply as the parent
+        env = {"PYTHONPATH": "src", "PYTHONHASHSEED": seed_env,
+               "PATH": "/usr/bin:/bin",
+               "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+               "XLA_FLAGS": os.environ.get(
+                   "XLA_FLAGS", "--xla_backend_optimization_level=0")}
         r = subprocess.run([sys.executable, "-c", code],
-                           capture_output=True, text=True,
-                           env={"PYTHONPATH": "src",
-                                "PYTHONHASHSEED": seed_env,
-                                "PATH": "/usr/bin:/bin"}, cwd="/root/repo")
+                           capture_output=True, text=True, timeout=300,
+                           env=env, cwd="/root/repo")
         assert r.returncode == 0, r.stderr
         outs.add(r.stdout.strip())
     assert len(outs) == 1, f"init differs across processes: {outs}"

@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional extra: property tests skip, rest run
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import (A100, H100, L40S, PYTORCH_70B, QWEN25_7B_MEASURED,
                         LoaderSpec)

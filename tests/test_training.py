@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional extra: property tests skip, rest run
+    from _hypothesis_shim import given, settings, st
 
 from repro.checkpoint import (CheckpointManager, latest_step, restore_pytree,
                               save_pytree)
@@ -104,8 +107,12 @@ def test_train_resume_bitexact(tmp_path):
 def test_loss_descends_with_grad_accum_and_compression():
     cfg = get_reduced("qwen2-5-7b")
     from repro.models.model import RunFlags
+    # schedule sized to the run: the default AdamWConfig warms up over
+    # 100 steps, so a 40-step run would never leave the ramp and the
+    # descent assertion reduces to noise
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=40)
     h = train(cfg, TrainConfig(steps=40, batch_size=4, seq_len=64,
-                               grad_compression=True,
+                               grad_compression=True, opt=opt,
                                flags=RunFlags(grad_accum=2),
                                log_every=100), log_fn=lambda s: None)
     assert np.mean(h["loss"][-8:]) < np.mean(h["loss"][:8])
