@@ -14,7 +14,10 @@ import sys
 
 from benchmarks.common import emit
 from repro.core.scheduler import AlwaysOn, Breakeven
-from repro.fleet import mixed_fleet_scenario, run_fleet
+from repro.fleet import SLOAwareRouter, mixed_fleet_scenario, run_fleet
+from repro.serving import RooflineServiceTime
+
+SLO_BUDGET_S = 90.0
 
 
 def run_all(fast: bool = False) -> None:
@@ -26,19 +29,22 @@ def run_all(fast: bool = False) -> None:
     print(f"== Fleet ({'fast smoke' if fast else '10 models x 6 GPUs, 24 h'};"
           f" {base.requests} requests) ==")
     hdr = (f"   {'configuration':38s} {'Wh':>9s} {'save%':>6s} {'cold':>5s}"
-           f" {'migr':>5s} {'lat_s':>6s}")
+           f" {'migr':>5s} {'req/s':>6s} {'p99_s':>7s}")
     print(hdr)
 
     def report(name: str, res) -> None:
         save = 100.0 * res.savings_vs(base)
         print(f"   {name:38s} {res.energy_wh:9.1f} {save:6.1f}"
               f" {res.cold_starts:5d} {res.migrations:5d}"
-              f" {res.mean_added_latency_s:6.2f}")
+              f" {res.requests_per_s:6.3f} {res.p99_added_latency_s:7.2f}")
         emit(f"{tag}.{name}.wh", f"{res.energy_wh:.1f}")
         emit(f"{tag}.{name}.savings_pct", f"{save:.1f}")
         emit(f"{tag}.{name}.cold_starts", str(res.cold_starts))
         emit(f"{tag}.{name}.mean_added_latency_s",
              f"{res.mean_added_latency_s:.2f}")
+        emit(f"{tag}.{name}.requests_per_s", f"{res.requests_per_s:.3f}")
+        emit(f"{tag}.{name}.p99_added_latency_s",
+             f"{res.p99_added_latency_s:.2f}")
 
     report("always-on_warm-everywhere", base)
     for router in ("warm-first", "least-loaded", "energy-greedy",
@@ -49,6 +55,19 @@ def run_all(fast: bool = False) -> None:
                 Breakeven, router, consolidate=cons, **kw)))
     report("always-on_consolidate", run_fleet(mixed_fleet_scenario(
         AlwaysOn, "warm-first", consolidate=True, **kw)))
+
+    # concurrent serving: roofline service times (occupancy-dependent),
+    # loads overlapping decode, and the energy/latency Pareto the
+    # SLO-aware router trades along
+    svc = RooflineServiceTime()
+    print("   -- concurrent serving (roofline service times, "
+          f"max_batch=4, SLO budget {SLO_BUDGET_S:.0f} s) --")
+    report("svc_always-on_warm-first", run_fleet(mixed_fleet_scenario(
+        AlwaysOn, "warm-first", service_model=svc, **kw)))
+    report("svc_breakeven_energy-greedy", run_fleet(mixed_fleet_scenario(
+        Breakeven, "energy-greedy", service_model=svc, **kw)))
+    report("svc_breakeven_slo-aware", run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(SLO_BUDGET_S), service_model=svc, **kw)))
 
     print(f"   {'clairvoyant shared-context bound':38s}"
           f" {base.lb_shared_wh:9.1f} {100 * (1 - base.lb_shared_wh / base.energy_wh):6.1f}")

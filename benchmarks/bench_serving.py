@@ -34,6 +34,50 @@ def bench_decode_throughput() -> str:
     return f"decode {tps:.0f} tok/s (reduced cfg, CPU, batch 4)"
 
 
+def bench_request_churn() -> str:
+    """Continuous-batching request churn on the live engine: admit /
+    step / release under slot contention, reporting requests/s, p99
+    request latency, and the metered energy estimate for the run (H100
+    active power over the wall time -- catalog estimate, not measured)."""
+    from repro.core import H100
+
+    cfg = get_reduced("qwen2-5-7b")
+    params = materialize(build_param_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=64,
+                        flags=RunFlags(remat="none"))
+    eng.admit([1, 2, 3])
+    eng.step()                                  # compile
+    eng.release(0)
+
+    n_requests, max_new = 12, 6
+    pending = [[1 + i, 2, 3] for i in range(n_requests)]
+    lat: list = []
+    t0 = time.perf_counter()
+    births: dict = {}
+    left: dict = {}
+    while pending or births:
+        while pending and eng.free_slots():
+            slot = eng.admit(pending.pop())
+            births[slot] = time.perf_counter()
+            left[slot] = max_new - 1
+        eng.step()
+        for slot in list(births):
+            left[slot] -= 1
+            if left[slot] <= 0:
+                lat.append(time.perf_counter() - births.pop(slot))
+                del left[slot]
+                eng.release(slot)
+    wall = time.perf_counter() - t0
+    rps = n_requests / wall
+    p99_ms = float(np.percentile(np.asarray(lat), 99)) * 1e3
+    wh_est = H100.active_power_w(0.6) * wall / 3600.0
+    emit("serving.requests_per_s_cpu", f"{rps:.1f}")
+    emit("serving.p99_request_latency_ms_cpu", f"{p99_ms:.0f}")
+    emit("serving.churn_wh_est", f"{wh_est:.4f}")
+    return (f"churn {rps:.1f} req/s, p99 {p99_ms:.0f} ms, "
+            f"~{wh_est:.3f} Wh (H100-active est)")
+
+
 def bench_train_step() -> str:
     cfg = get_reduced("gemma3-1b")
     hist = train(cfg, TrainConfig(steps=8, batch_size=4, seq_len=64,
@@ -44,4 +88,5 @@ def bench_train_step() -> str:
 
 
 def run_all() -> None:
-    print("== Serving:", bench_decode_throughput(), "|", bench_train_step())
+    print("== Serving:", bench_decode_throughput(), "|",
+          bench_request_churn(), "|", bench_train_step())

@@ -7,8 +7,8 @@ from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
 from repro.fleet.router import (BreakevenRouter, Consolidator,
                                 EnergyGreedyRouter, LeastLoadedRouter,
-                                Move, ROUTERS, Router, WarmFirstRouter,
-                                get_router)
+                                Move, ROUTERS, Router, SLOAwareRouter,
+                                WarmFirstRouter, get_router)
 from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
                                   FleetScenario, clairvoyant_bound,
                                   mixed_fleet_scenario, run_fleet,
@@ -20,8 +20,8 @@ __all__ = [
     "get_mix", "get_sku",
     "Cluster", "FleetModelSpec", "RateEstimator",
     "Router", "ROUTERS", "WarmFirstRouter", "LeastLoadedRouter",
-    "EnergyGreedyRouter", "BreakevenRouter", "Consolidator", "Move",
-    "get_router",
+    "EnergyGreedyRouter", "BreakevenRouter", "SLOAwareRouter",
+    "Consolidator", "Move", "get_router",
     "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
     "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
     "clairvoyant_bound",

@@ -76,6 +76,10 @@ class GPUSku:
     usd_per_hr: float                # on-demand device-hour price
     usd_per_hr_reserved: float
     usd_per_hr_spot: float
+    # peak dense bf16 throughput (vendor datasheet, no sparsity): the
+    # compute roof the service-time model (serving/service_model.py)
+    # divides through its MFU; memory bandwidth rides on the profile.
+    tflops_bf16: float = 0.0
 
     @property
     def vram_gb(self) -> float:
@@ -93,16 +97,16 @@ class GPUSku:
 CATALOG: Dict[str, GPUSku] = {
     "h100": GPUSku("h100", get_profile("h100"), slots=8,
                    usd_per_hr=6.98, usd_per_hr_reserved=4.80,
-                   usd_per_hr_spot=2.90),
+                   usd_per_hr_spot=2.90, tflops_bf16=989.0),
     "a100": GPUSku("a100", get_profile("a100"), slots=8,
                    usd_per_hr=4.10, usd_per_hr_reserved=3.20,
-                   usd_per_hr_spot=1.70),
+                   usd_per_hr_spot=1.70, tflops_bf16=312.0),
     "l40s": GPUSku("l40s", get_profile("l40s"), slots=6,
                    usd_per_hr=1.90, usd_per_hr_reserved=1.40,
-                   usd_per_hr_spot=0.80),
+                   usd_per_hr_spot=0.80, tflops_bf16=362.0),
     "tpu_v5e": GPUSku("tpu_v5e", get_profile("tpu_v5e"), slots=2,
                       usd_per_hr=1.20, usd_per_hr_reserved=0.94,
-                      usd_per_hr_spot=0.50),
+                      usd_per_hr_spot=0.50, tflops_bf16=197.0),
 }
 
 

@@ -90,6 +90,9 @@ class FleetModelSpec:
     checkpoint_bytes: Optional[int] = None   # else derived per device
     vram_gb: float = 0.0
     home: Optional[str] = None               # device to prewarm on at t=0
+    # per-model numbers for the calibrated service-time model; None means
+    # the model derives them from checkpoint_bytes
+    service: Optional[object] = None         # serving.ModelServiceProfile
 
     def __post_init__(self):
         if self.loader is None and self.checkpoint_bytes is None:
@@ -113,6 +116,11 @@ class Cluster:
         self.rates: Dict[str, RateEstimator] = {}
         self._loaders: Dict[tuple, LoaderSpec] = {}
         self.migrations = 0
+        # attached by the fleet event loop (run_fleet): per-device
+        # DeviceRuntime (serving/slots.py) + the scenario's service-time
+        # model.  Empty/None when the cluster is driven directly.
+        self.runtime: Dict[str, object] = {}
+        self.service_model = None
 
     # -- registry -----------------------------------------------------------
     def register_model(self, spec: FleetModelSpec) -> None:
@@ -182,6 +190,81 @@ class Cluster:
                 and self.free_vram_gb(device_id)
                 >= self.specs[model_id].vram_gb)
 
+    # -- concurrency state (fed by the attached DeviceRuntimes) --------------
+    def attach_runtime(self, runtime: Dict[str, object],
+                       service_model=None) -> None:
+        """Register the fleet event loop's per-device runtimes so routers
+        (queue depth, slot occupancy) and the power composer can see
+        in-flight work."""
+        self.runtime = runtime
+        if service_model is not None:
+            self.service_model = service_model
+
+    def busy_slots(self, device_id: str,
+                   model_id: Optional[str] = None) -> int:
+        rt = self.runtime.get(device_id)
+        return rt.busy_slots(model_id) if rt is not None else 0
+
+    def waiting_requests(self, device_id: str,
+                         model_id: Optional[str] = None) -> int:
+        rt = self.runtime.get(device_id)
+        return rt.waiting_count(model_id) if rt is not None else 0
+
+    def decode_slots(self, device_id: str) -> int:
+        rt = self.runtime.get(device_id)
+        return rt.max_batch if rt is not None else 1
+
+    def load_residual_s(self, device_id: str, now_s: float) -> float:
+        """Remaining seconds of the in-flight load (0 when idle)."""
+        rt = self.runtime.get(device_id)
+        if rt is None or rt.loading is None:
+            return 0.0
+        return max(rt.loading_until - now_s, 0.0)
+
+    def load_backlog_s(self, device_id: str, now_s: float, *,
+                       exclude_model: Optional[str] = None) -> float:
+        """Seconds of loader-channel work ahead of a load enqueued now:
+        residual of the in-flight load + queued (re)loads/migrations.
+        ``exclude_model`` skips that model's own queued load (a caller
+        estimating ITS wait would otherwise count it twice)."""
+        rt = self.runtime.get(device_id)
+        if rt is None:
+            return 0.0
+        s = self.load_residual_s(device_id, now_s)
+        for item in rt.load_q:
+            if item[-1] != exclude_model:
+                s += self.loader_for(item[-1], device_id).t_load_s
+        return s
+
+    def sync_power(self, device_id: str, *,
+                   service_util: float = 0.6) -> None:
+        """Recompose the device's metered power from its concurrent phase
+        state (the additive decomposition that makes overlap meterable):
+
+            P = (p_load if a load is in flight else P_idle(ctx))
+                + busy_slots * (P_active - P_ctx)
+
+        With one phase at a time this reduces exactly to the serialized
+        accounting (flat p_load during loads, active_power_w(0.6) during
+        service), preserving the single-device equivalence anchor; with
+        overlap, each busy decode slot adds its above-context increment
+        on top of whichever base phase is running."""
+        mm = self.managers[device_id]
+        prof = self.devices[device_id].profile
+        loading = next((m for m in mm.models.values() if m.loading), None)
+        busy = self.busy_slots(device_id)
+        if busy > 0:
+            base = loading.loader.p_load_w if loading is not None \
+                else prof.idle_power_w(context_active=True)
+            p = base + busy * (prof.active_power_w(service_util)
+                               - prof.p_ctx_w)
+            mm.meter.transition("active", power_override_w=p)
+        elif loading is not None:
+            mm.meter.transition("loading",
+                                power_override_w=loading.loader.p_load_w)
+        else:
+            mm.settle()
+
     def idle_power_w(self) -> float:
         """Instantaneous fleet idle power from context state (Eq. 1 summed
         over devices; loading/active bursts excluded by design -- this is
@@ -238,9 +321,13 @@ class Cluster:
                     *, service_s: float = 0.0) -> None:
         m = self.replica(device_id, model_id)
         m.requests += 1
-        m.added_latency_s += max(self.clock() - arrival_s, 0.0)
+        wait = max(self.clock() - arrival_s, 0.0)
+        m.added_latency_s += wait
+        m.latency_samples.append(wait)
         m.evict_at = math.inf          # never evict mid-service
-        if service_s > 0:
+        if service_s > 0 and not self.runtime:
+            # legacy blocking path (no concurrent runtime attached): the
+            # caller owns advancing the clock through the service window
             self.managers[device_id].meter.transition("active")
 
     def end_serve(self, device_id: str, model_id: str) -> None:

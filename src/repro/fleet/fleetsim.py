@@ -16,14 +16,25 @@ P_base, loads at P_load, start-warm counts one cold start).
 
 Events (heap, stable order: phase completions before consolidation
 before arrivals at equal times):
-  * arrival    -- route, queue on the chosen device
-  * load_done  -- finish a split-phase (re)load, drain the device queue
-  * serve_done -- only when service_s > 0
+  * arrival    -- route, then serve / queue / trigger a load
+  * load_done  -- land a split-phase (re)load, drain that model's wait
+                  queue into decode slots, pump the loader channel
+  * serve_done -- release the decode slot, admit the next waiter
   * consolidate-- run the packing pass, enqueue migrations
 
-A device serializes its work (loads/service); queued requests for a
-model that is mid-load are served the instant the load completes, which
-is exactly the single-device simulator's batching rule.
+Concurrency model (serving/slots.py DeviceRuntime): each device has ONE
+serialized loader channel (weight ingest is PCIe/storage-bound) and,
+per resident model, ``max_batch`` decode slots -- so loads overlap
+serving and up to ``max_batch`` requests per model decode concurrently.
+Service time per request comes from the scenario's ``ServiceTimeModel``
+(serving/service_model.py), frozen at admission occupancy.  Power under
+overlap composes additively (Cluster.sync_power): the idle/loading base
+plus one above-context active increment per busy slot -- which reduces
+exactly to the old serialized accounting when phases never overlap, so
+the single-device equivalence anchor below still holds.  Queued
+requests for a model that is mid-load are served the instant the load
+completes, which is exactly the single-device simulator's batching
+rule.
 
 The clairvoyant lower bound reported alongside is the cluster analogue
 of ``scheduler.Clairvoyant``: per model, offline per-gap ski rental
@@ -40,7 +51,6 @@ import dataclasses
 import heapq
 import itertools
 import math
-from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -50,6 +60,8 @@ from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
 from repro.fleet.router import Consolidator, Router, get_router
+from repro.serving.service_model import ConstantServiceTime, ServiceTimeModel
+from repro.serving.slots import DeviceRuntime
 
 DAY = 24 * 3600.0
 
@@ -70,10 +82,19 @@ class FleetScenario:
     models: List[FleetModel]
     router: Union[Router, str] = "warm-first"
     horizon_s: float = DAY
-    service_s: float = 0.0
+    service_s: float = 0.0                   # legacy constant service time
     consolidator: Optional[Consolidator] = None
     zone: str = "USA"
     price_tier: str = "on_demand"
+    # concurrency knobs: decode slots per resident model, and the
+    # service-time model (None -> ConstantServiceTime(service_s), which
+    # with the default service_s=0 reproduces the paper's
+    # service-energy-held-constant convention)
+    max_batch: int = 4
+    service_model: Optional[ServiceTimeModel] = None
+
+    def resolved_service_model(self) -> ServiceTimeModel:
+        return self.service_model or ConstantServiceTime(self.service_s)
 
 
 @dataclasses.dataclass
@@ -108,29 +129,42 @@ class FleetResult:
     infra_usd: float
     energy_usd: float
     carbon_kg: float
+    # per-request added latency (queue wait + cold start), sorted
+    latencies_s: Sequence[float] = ()
 
     @property
     def mean_added_latency_s(self) -> float:
         return (self.added_latency_s_total / self.requests
                 if self.requests else 0.0)
 
+    def _latency_pct(self, q: float) -> float:
+        arr = np.asarray(self.latencies_s, dtype=float)
+        return float(np.percentile(arr, q)) if arr.size else 0.0
+
+    @property
+    def p50_added_latency_s(self) -> float:
+        return self._latency_pct(50.0)
+
+    @property
+    def p99_added_latency_s(self) -> float:
+        return self._latency_pct(99.0)
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.requests / self.horizon_s if self.horizon_s > 0 else 0.0
+
     def savings_vs(self, baseline: "FleetResult") -> float:
+        """Fractional energy saving vs a baseline run; 0.0 against a
+        degenerate zero-energy baseline (instead of inf/ZeroDivision)."""
+        if baseline.energy_wh <= 0.0:
+            return 0.0
         return 1.0 - self.energy_wh / baseline.energy_wh
-
-
-class _DeviceRT:
-    """Per-device runtime for the event loop (busy flag + work queue)."""
-    __slots__ = ("busy", "queue")
-
-    def __init__(self):
-        self.busy = False
-        # items: ("req", arrival_s, model_id) | ("mig", src_id, model_id)
-        self.queue: deque = deque()
 
 
 def run_fleet(scenario: FleetScenario) -> FleetResult:
     sc = scenario
     router = get_router(sc.router) if isinstance(sc.router, str) else sc.router
+    svc = sc.resolved_service_model()
     cluster = Cluster(sc.devices)
     for fm in sc.models:
         cluster.register_model(fm.spec)
@@ -166,53 +200,90 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     if sc.consolidator is not None and sc.consolidator.period_s < sc.horizon_s:
         push(sc.consolidator.period_s, _P_CONS, "consolidate", ())
 
-    rt = {did: _DeviceRT() for did in cluster.devices}
+    rt = {did: DeviceRuntime(sc.max_batch) for did in cluster.devices}
+    cluster.attach_runtime(rt, svc)
 
-    def start_next(did: str, now: float) -> None:
-        """Drain the device queue until it blocks on a load/serve."""
+    def begin_request(did: str, mid: str, arrival_t: float,
+                      now: float) -> None:
+        """Start serving one request NOW (caller checked residency and,
+        for timed service, slot availability).  Service time is frozen
+        at admission occupancy."""
         r = rt[did]
-        while r.queue:
-            item = r.queue[0]
-            if item[0] == "req":
-                _, a_t, mid = item
+        svc_s = svc.request_service_s(cluster.specs[mid],
+                                      cluster.devices[did],
+                                      r.pool(mid).busy + 1)
+        cluster.begin_serve(did, mid, arrival_t, service_s=svc_s)
+        if svc_s <= 0.0:
+            cluster.end_serve(did, mid)      # instantaneous, slot-free
+            return
+        slot = r.pool(mid).acquire()
+        push(now + svc_s, _P_DONE, "serve_done", (did, mid, slot))
+
+    def drain_waiting(did: str, mid: str, now: float) -> None:
+        """Admit waiters into free decode slots, oldest first."""
+        r = rt[did]
+        q = r.wait_q(mid)
+        while q and not r.pool(mid).full:
+            begin_request(did, mid, q.popleft(), now)
+
+    def dispatch(did: str, mid: str, arrival_t: float, now: float) -> None:
+        """Serve, queue, or trigger a load for one routed request."""
+        r = rt[did]
+        m = cluster.replica(did, mid)
+        if m.resident:
+            if r.pool(mid).full:
+                r.wait_q(mid).append(arrival_t)
+                return
+            begin_request(did, mid, arrival_t, now)
+            return
+        r.wait_q(mid).append(arrival_t)
+        if not m.loading and mid not in r.load_queued:
+            r.load_queued.add(mid)
+            r.load_q.append(("load", mid))
+        pump_loader(did, now)
+
+    def pump_loader(did: str, now: float) -> None:
+        """Start the next queued (re)load/migration if the serialized
+        loader channel is free."""
+        r = rt[did]
+        while r.loading is None and r.load_q:
+            item = r.load_q.popleft()
+            mid = item[-1]
+            if item[0] == "load":
                 m = cluster.replica(did, mid)
-                if m.resident:
-                    r.queue.popleft()
-                    cluster.begin_serve(did, mid, a_t,
-                                        service_s=sc.service_s)
-                    if sc.service_s > 0:
-                        r.busy = True
-                        push(now + sc.service_s, _P_DONE, "serve_done",
-                             (did, mid))
-                        return
-                    cluster.end_serve(did, mid)
+                if m.resident or m.loading:
+                    # a migration raced the request here and landed (or
+                    # is landing) the model: nothing left to load
+                    r.load_queued.discard(mid)
+                    if m.resident:
+                        drain_waiting(did, mid, now)
                     continue
                 dt = cluster.start_load(did, mid)
-                r.busy = True
-                push(now + dt, _P_DONE, "load_done", (did, mid))
-                return
-            # migration item
-            r.queue.popleft()
-            _, src, mid = item
-            if rt[src].busy or rt[src].queue:
-                # source started working (possibly serving, or holding
-                # queued requests for, this very model) since the plan:
-                # defer to the next pass
-                continue
-            m = cluster.replica(did, mid)
-            if m.resident or m.loading:
-                # a request raced the plan and loaded it here; dedupe src
-                if src != did and mid in cluster.managers[src].models:
-                    cluster.managers[src].unload(mid)
-                continue
-            src_m = cluster.managers[src].models.get(mid)
-            if src_m is None or not src_m.resident:
-                continue                     # source evicted it meanwhile
-            dt = cluster.start_migration(mid, src, did)
-            r.busy = True
+            else:                            # ("mig", src, mid)
+                src = item[1]
+                if rt[src].busy:
+                    # source started working (possibly serving, or
+                    # holding queued requests for, this very model)
+                    # since the plan: defer to the next pass
+                    continue
+                m = cluster.replica(did, mid)
+                if m.resident or m.loading:
+                    # a request raced the plan and loaded it here;
+                    # dedupe the source copy
+                    if src != did and mid in cluster.managers[src].models:
+                        src_m = cluster.managers[src].models[mid]
+                        if src_m.resident:
+                            cluster.managers[src].unload(mid)
+                            cluster.sync_power(src)
+                    continue
+                src_m = cluster.managers[src].models.get(mid)
+                if src_m is None or not src_m.resident:
+                    continue                 # source evicted it meanwhile
+                dt = cluster.start_migration(mid, src, did)
+                cluster.sync_power(src)
+            r.loading = mid
+            r.loading_until = now + dt
             push(now + dt, _P_DONE, "load_done", (did, mid))
-            return
-        r.busy = False
 
     while heap:
         t, _phase, _s, kind, data = heapq.heappop(heap)
@@ -223,31 +294,37 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             cluster.observe_arrival(mid, did, t)
             # pin the routed replica: queued demand must not be evicted
             # (by its armed idle timeout OR by make_room capacity
-            # pressure) while the device works through other models;
+            # pressure) while the request waits for a slot or a load;
             # end_serve unpins and re-arms after serving
             rep = cluster.replica(did, mid)
             rep.pins += 1
             rep.evict_at = math.inf
-            rt[did].queue.append(("req", t, mid))
-            if not rt[did].busy:
-                start_next(did, t)
+            dispatch(did, mid, t, t)
+            cluster.sync_power(did)
         elif kind == "load_done":
             did, mid = data
+            r = rt[did]
             cluster.finish_load(did, mid)
-            rt[did].busy = False
-            start_next(did, t)
+            r.loading = None
+            r.load_queued.discard(mid)
+            m = cluster.managers[did].models[mid]
+            if m.pins > 0:
+                m.evict_at = math.inf        # queued demand stays pinned
+            drain_waiting(did, mid, t)
+            pump_loader(did, t)
+            cluster.sync_power(did)
         elif kind == "serve_done":
-            did, mid = data
+            did, mid, slot = data
+            rt[did].pool(mid).release(slot)
             cluster.end_serve(did, mid)
-            rt[did].busy = False
-            start_next(did, t)
+            drain_waiting(did, mid, t)
+            cluster.sync_power(did)
         elif kind == "consolidate":
-            busy_map = {did: r.busy or bool(r.queue)
-                        for did, r in rt.items()}
+            busy_map = {did: r.busy for did, r in rt.items()}
             for mv in sc.consolidator.plan(cluster, t, busy_map):
-                rt[mv.dst].queue.append(("mig", mv.src, mv.model_id))
-                if not rt[mv.dst].busy:
-                    start_next(mv.dst, t)
+                rt[mv.dst].load_q.append(("mig", mv.src, mv.model_id))
+                pump_loader(mv.dst, t)
+                cluster.sync_power(mv.dst)
             nxt = t + sc.consolidator.period_s
             if nxt < sc.horizon_s:
                 push(nxt, _P_CONS, "consolidate", ())
@@ -260,11 +337,14 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     reports = []
     cold = reqs = 0
     latency = 0.0
+    samples: List[float] = []
     for did in sorted(cluster.devices):
         mm = cluster.managers[did]
         d_cold = sum(m.cold_starts for m in mm.models.values())
         d_reqs = sum(m.requests for m in mm.models.values())
         latency += sum(m.added_latency_s for m in mm.models.values())
+        for m in mm.models.values():
+            samples.extend(m.latency_samples)
         cold += d_cold
         reqs += d_reqs
         reports.append(DeviceReport(
@@ -286,7 +366,8 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         lb_shared_wh=lb_shared, cv_per_model_wh=cv_sum,
         infra_usd=fleet_price_usd(sc.devices, sc.horizon_s, sc.price_tier),
         energy_usd=energy_cost_usd(energy, mix),
-        carbon_kg=carbon_kg(energy, mix))
+        carbon_kg=carbon_kg(energy, mix),
+        latencies_s=np.sort(np.asarray(samples, dtype=float)))
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +428,9 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
                          n_models: int = 10,
                          fleet: str = "2xh100+2xa100+2xl40s",
                          horizon_s: float = DAY, seed: int = 100,
-                         service_s: float = 0.0) -> FleetScenario:
+                         service_s: float = 0.0,
+                         service_model: Optional[ServiceTimeModel] = None,
+                         max_batch: int = 4) -> FleetScenario:
     """The ISSUE's reference scenario (shared by bench_fleet and the
     fleet_parking example): N models under a diurnal + bursty +
     heavy-tail + steady traffic rotation on a mixed-architecture fleet.
@@ -371,15 +454,19 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
         models.append(FleetModel(spec, arr))
     return FleetScenario(devices=devices, models=models, router=router,
                          horizon_s=horizon_s, service_s=service_s,
+                         service_model=service_model, max_batch=max_batch,
                          consolidator=Consolidator() if consolidate else None)
 
 
 def single_device_scenario(arrivals_s: Sequence[float], policy_factory,
                            loader, sku_key: str = "h100", *,
                            horizon_s: float = DAY, start_warm: bool = True,
-                           service_s: float = 0.0) -> FleetScenario:
+                           service_s: float = 0.0,
+                           max_batch: int = 1) -> FleetScenario:
     """1 device x 1 model -- the fleet degenerate case that must agree
-    with ``core.simulator.simulate`` (tested to 1e-6 Wh)."""
+    with ``core.simulator.simulate`` (tested to 1e-6 Wh).  max_batch
+    defaults to 1 because the reference simulator serializes service;
+    with service_s=0 any slot count is equivalent (tested)."""
     devices = build_fleet([sku_key])
     spec = FleetModelSpec(
         model_id="m0", policy_factory=policy_factory, loader=loader,
@@ -387,4 +474,4 @@ def single_device_scenario(arrivals_s: Sequence[float], policy_factory,
     return FleetScenario(devices=devices,
                          models=[FleetModel(spec, list(arrivals_s))],
                          router="warm-first", horizon_s=horizon_s,
-                         service_s=service_s)
+                         service_s=service_s, max_batch=max_batch)

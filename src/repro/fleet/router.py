@@ -20,6 +20,11 @@ opens:
                        min(step * E[gap], reload) so models with
                        sub-breakeven traffic land on low-step devices
                        (A100) and hot models on fast-loading ones.
+  * slo-aware       -- energy min subject to a p99 added-latency
+                       budget: estimates each candidate's queue wait +
+                       cold-start time from live slot occupancy and
+                       loader backlog, routes energy-greedy inside the
+                       budget, latency-greedy when nothing fits.
 
 Consolidation is the placement half: periodically migrate parked models
 off lightly-packed devices onto already-on devices with room, so the
@@ -31,6 +36,7 @@ it now saves ``dvfs_step_w * (max evict_at - now)``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Tuple
 
 from repro.core.breakeven import breakeven_seconds
@@ -135,9 +141,80 @@ class BreakevenRouter(EnergyGreedyRouter):
     steady_state = True
 
 
+class SLOAwareRouter(Router):
+    """Energy minimization subject to a per-request latency budget.
+
+    The router estimates the added latency (queue wait + cold start)
+    a request would see on every candidate device, from the live
+    concurrency state the fleet event loop publishes through the
+    cluster: loader-channel backlog, decode-slot occupancy, and
+    per-model wait-queue depth.  Among devices whose estimate fits the
+    budget it picks the energy-greedy choice (warm replicas are free);
+    when NO device fits -- e.g. the model is cold everywhere and its
+    load alone blows the budget -- it degrades to latency-greedy, which
+    is what keeps the realized p99 pinned near the best achievable
+    rather than wherever cheap joules happen to live.  ``budget_s`` is
+    the p99 added-latency target the operator configures."""
+
+    name = "slo-aware"
+
+    def __init__(self, budget_s: float = 60.0, *, headroom: float = 1.0):
+        if budget_s <= 0:
+            raise ValueError("budget must be positive")
+        self.budget_s = budget_s
+        self.headroom = headroom      # <1.0 routes against a tighter bar
+
+    # -- latency estimate ---------------------------------------------------
+    def estimated_wait_s(self, model_id: str, device_id: str, t_s: float,
+                         cluster: Cluster) -> float:
+        m = cluster.managers[device_id].models.get(model_id)
+        svc = cluster.service_model
+        svc_s = 0.0
+        if svc is not None:
+            busy = cluster.busy_slots(device_id, model_id)
+            svc_s = svc.request_service_s(cluster.specs[model_id],
+                                          cluster.devices[device_id],
+                                          max(busy, 1))
+        waiting = cluster.waiting_requests(device_id, model_id)
+        slots = max(cluster.decode_slots(device_id), 1)
+        if m is not None and m.resident:
+            pool_full = cluster.busy_slots(device_id, model_id) >= slots
+            if not pool_full and waiting == 0:
+                return 0.0
+            # FIFO rounds through the batch until our turn comes up
+            return math.ceil((waiting + 1) / slots) * svc_s
+        if m is not None and m.loading:
+            # the load is in flight: only its residual can delay us
+            # (loads queued behind it start after we already serve)
+            return (cluster.load_residual_s(device_id, t_s)
+                    + (waiting // slots) * svc_s)
+        # cold: whatever the loader channel holds, then our own load
+        # (excluded from the backlog if a prior request already queued it)
+        backlog = cluster.load_backlog_s(device_id, t_s,
+                                         exclude_model=model_id)
+        return backlog + cluster.loader_for(model_id, device_id).t_load_s
+
+    def choose(self, model_id, t_s, cluster) -> str:
+        warm = set(cluster.locations(model_id, include_loading=True))
+        cands = sorted(set(self._placeable(model_id, cluster)) | warm)
+        est = {d: self.estimated_wait_s(model_id, d, t_s, cluster)
+               for d in cands}
+        budget = self.budget_s * self.headroom
+        ok = [d for d in cands if est[d] <= budget]
+        if not ok:                    # infeasible: minimize latency instead
+            return min(cands, key=lambda d: (est[d], d))
+        score = self._joule_score(model_id, cluster, steady_state=True)
+
+        def key(d: str):
+            joules = 0.0 if d in warm else score(d)[0]
+            return (joules, est[d], d)
+
+        return min(ok, key=key)
+
+
 ROUTERS = {r.name: r for r in
            (WarmFirstRouter(), LeastLoadedRouter(), EnergyGreedyRouter(),
-            BreakevenRouter())}
+            BreakevenRouter(), SLOAwareRouter())}
 
 
 def get_router(name: str) -> Router:

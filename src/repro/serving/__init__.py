@@ -1,6 +1,13 @@
 from repro.serving.energy import EnergyMeter, SimClock
 from repro.serving.engine import GenerationResult, ServingEngine
 from repro.serving.model_manager import ManagedModel, ModelManager
+from repro.serving.service_model import (ConstantServiceTime,
+                                         ModelServiceProfile, RequestShape,
+                                         RooflineServiceTime,
+                                         ServiceTimeModel)
+from repro.serving.slots import DeviceRuntime, SlotPool
 
 __all__ = ["EnergyMeter", "SimClock", "ServingEngine", "GenerationResult",
-           "ModelManager", "ManagedModel"]
+           "ModelManager", "ManagedModel", "SlotPool", "DeviceRuntime",
+           "ServiceTimeModel", "ConstantServiceTime", "RooflineServiceTime",
+           "ModelServiceProfile", "RequestShape"]

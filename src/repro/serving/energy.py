@@ -44,12 +44,16 @@ class EnergyMeter:
         self._power_override: Optional[float] = None
 
     def _power_w(self, state: str) -> float:
+        # an explicit override wins in ANY state: concurrent phases
+        # (load overlapping decode) meter at their composed power
+        if self._power_override is not None:
+            return self._power_override
         if state == "bare":
             return self.profile.p_base_w
         if state == "parked":
             return self.profile.idle_power_w(context_active=True)
         if state == "loading":
-            return self._power_override or (self.profile.p_base_w + 30.0)
+            return self.profile.p_base_w + 30.0
         if state == "active":
             return self.profile.active_power_w(0.6)
         raise ValueError(state)

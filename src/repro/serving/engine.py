@@ -6,6 +6,8 @@ one stacked KV cache of ``max_len``.  Requests prefill into a free slot
 (prompt written at cache offset 0..len) and then join the batched decode
 step; finished slots are released and immediately reusable -- continuous
 batching without recompilation (slot count and cache length are static).
+Slot occupancy is tracked by the shared ``serving/slots.py`` SlotPool --
+the same abstraction the fleet simulator's per-device runtime builds on.
 
 Runs the same code the dry-run lowers; on this container the reduced
 configs decode for real on CPU (examples/serve_parking.py).
@@ -23,6 +25,7 @@ from repro.models.config import ArchConfig
 from repro.models.model import (RunFlags, build_cache_specs,
                                 build_param_specs, decode_step, prefill)
 from repro.models.params import materialize
+from repro.serving.slots import SlotPool
 
 Tree = Any
 
@@ -49,8 +52,8 @@ class ServingEngine:
         self._caches = materialize(
             build_cache_specs(cfg, max_batch, max_len, jnp.float32),
             jax.random.PRNGKey(0))
+        self._slots = SlotPool(max_batch)                # occupancy tracker
         self._slot_pos = np.zeros(max_batch, np.int32)   # next write offset
-        self._slot_live = np.zeros(max_batch, bool)
         self._slot_last = np.zeros(max_batch, np.int32)  # last sampled token
 
         cfg_ = cfg
@@ -67,16 +70,15 @@ class ServingEngine:
 
     # -- slots -------------------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i in range(self.max_batch) if not self._slot_live[i]]
+        return self._slots.free_slots()
 
     # -- serving -----------------------------------------------------------
     def admit(self, prompt: List[int], extras: Optional[Dict[str, Any]]
               = None) -> int:
         """Prefill `prompt` into a free slot; returns the slot id."""
-        free = self.free_slots()
-        if not free:
+        slot = self._slots.acquire()
+        if slot is None:
             raise RuntimeError("no free slots")
-        slot = free[0]
         # batch-1 prefill then scatter the slot's cache rows
         toks = jnp.asarray(prompt, jnp.int32)[None, :]
         batch = {"tokens": toks}
@@ -94,7 +96,6 @@ class ServingEngine:
                 big, small[:, 0], slot, 1)
         self._caches = jax.tree_util.tree_map(put, self._caches, b1_caches)
         self._slot_pos[slot] = len(prompt)
-        self._slot_live[slot] = True
         self._slot_last[slot] = next_tok
         return slot
 
@@ -104,7 +105,7 @@ class ServingEngine:
         per-slot position vector folded into a single max-pos decode (the
         static-shape compromise: positions differ per slot, so we decode
         at each slot's own offset using a vectorized pos array)."""
-        if not self._slot_live.any():
+        if self._slots.busy == 0:
             return {}
         # single shared offset decode: use per-slot position by running
         # decode at pos = max over live slots after aligning; simplest
@@ -112,9 +113,12 @@ class ServingEngine:
         out: Dict[int, int] = {}
         tokens = jnp.asarray(self._slot_last, jnp.int32)[:, None]
         # group slots by their current position -> one decode per group
-        live = np.where(self._slot_live)[0]
-        for pos in np.unique(self._slot_pos[live]):
-            pos_slots = [s for s in live if self._slot_pos[s] == pos]
+        # (snapshot positions first: a slot advanced by an earlier group
+        # must not match a later group's position and decode twice)
+        live = np.asarray(self._slots.live_slots(), dtype=np.intp)
+        pos_now = self._slot_pos.copy()
+        for pos in np.unique(pos_now[live]):
+            pos_slots = [s for s in live if pos_now[s] == pos]
             logits, new_caches = self._jit_decode(
                 self.params, tokens, self._caches, jnp.int32(pos))
             # keep cache updates only for the slots at this position
@@ -136,7 +140,7 @@ class ServingEngine:
         return out
 
     def release(self, slot: int) -> None:
-        self._slot_live[slot] = False
+        self._slots.release(slot)
         self._slot_pos[slot] = 0
 
     def generate(self, prompt: List[int], max_new: int = 16

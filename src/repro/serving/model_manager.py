@@ -48,6 +48,9 @@ class ManagedModel:
     cold_starts: int = 0
     requests: int = 0
     added_latency_s: float = 0.0
+    # per-request added latency (queue wait + cold start), one entry per
+    # served request -- the fleet layer aggregates these into p50/p99
+    latency_samples: List[float] = dataclasses.field(default_factory=list)
 
 
 class ModelManager:
@@ -200,10 +203,13 @@ class ModelManager:
         m = self.models[model_id]
         m.requests += 1
         m.policy.observe_arrival(self.clock())
+        wait = 0.0
         if not m.resident:
             t0 = self.clock()
             self._load(m)
-            m.added_latency_s += self.clock() - t0
+            wait = self.clock() - t0
+            m.added_latency_s += wait
+        m.latency_samples.append(wait)
         result = None
         if work_fn is not None or service_s > 0:
             self.meter.transition("active")

@@ -51,6 +51,59 @@ def test_slot_exhaustion(engine):
         engine.release(s)
 
 
+def test_release_then_reuse_keeps_decode_exact(engine):
+    """A released slot is immediately reusable, and a sequence admitted
+    into the recycled slot decodes exactly as it would in a fresh one
+    (no KV-cache leakage from the previous occupant)."""
+    fresh = engine.generate([4, 5, 6], max_new=4).tokens
+    s0 = engine.admit([9, 8, 7, 6, 5])           # pollute slot 0's cache
+    engine.step()
+    engine.release(s0)
+    assert engine.free_slots()[0] == s0          # lowest-free reuse
+    again = engine.generate([4, 5, 6], max_new=4)
+    assert again.request_id == s0
+    assert again.tokens == fresh
+
+
+def test_admit_when_full_does_not_corrupt_live_slots(engine):
+    """Filling every slot, bouncing off the full pool, then releasing
+    and re-admitting leaves the surviving slot's decode unchanged."""
+    alone = engine.generate([11, 12, 13], max_new=4).tokens
+    keep = engine.admit([11, 12, 13])
+    others = [engine.admit([2, 3]) for _ in range(len(engine.free_slots()))]
+    with pytest.raises(RuntimeError):
+        engine.admit([7])
+    engine.release(others[0])
+    others[0] = engine.admit([5, 4, 3, 2])       # slot churn under load
+    toks = [int(engine._slot_last[keep])]
+    for _ in range(3):
+        toks.append(engine.step()[keep])
+    for s in [keep] + others:
+        engine.release(s)
+    assert toks == alone
+
+
+def test_interleaved_generate_keeps_caches_isolated(engine):
+    """A full generate() call interleaved with a live background slot
+    advances that slot without disturbing it: its token stream matches a
+    solo run stepped the same number of times, and the generate result
+    matches its own solo run."""
+    solo_bg = engine.generate([21, 22, 23], max_new=5).tokens
+    solo_fg = engine.generate([31, 32], max_new=4).tokens
+
+    bg = engine.admit([21, 22, 23])
+    toks = [int(engine._slot_last[bg])]
+    fg = engine.generate([31, 32], max_new=4)    # 3 step() calls inside
+    assert fg.tokens == solo_fg
+    # the background slot advanced exactly 3 decode steps meanwhile
+    assert int(engine._slot_pos[bg]) == 3 + 3
+    assert int(engine._slot_last[bg]) == solo_bg[3]
+    toks.append(engine.step()[bg])               # one more to be sure
+    engine.release(bg)
+    assert toks[0] == solo_bg[0]
+    assert toks[1] == solo_bg[4]
+
+
 def test_energy_meter_states():
     clk = SimClock()
     m = EnergyMeter(H100, clk)
