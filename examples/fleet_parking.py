@@ -24,7 +24,8 @@ added-latency budget).
 Run:  PYTHONPATH=src python examples/fleet_parking.py
 """
 from repro.core.scheduler import AlwaysOn, Breakeven
-from repro.fleet import SLOAwareRouter, mixed_fleet_scenario, run_fleet
+from repro.fleet import (ReplicaAutoscaler, SLOAwareRouter,
+                         mixed_fleet_scenario, run_fleet)
 from repro.serving import RooflineServiceTime
 
 
@@ -76,14 +77,35 @@ def main() -> None:
          mixed_fleet_scenario(Breakeven, SLOAwareRouter(30.0),
                               service_model=svc)),
     ]
+    slo_single = None
     for name, sc in pareto:
         res = run_fleet(sc)
+        if "p99 <= 90" in name:
+            slo_single = res
         print(f"{name:56s} {res.energy_wh:9.1f} {res.requests_per_s:6.3f}"
               f" {res.p50_added_latency_s:6.2f}"
               f" {res.p99_added_latency_s:7.2f}")
     print("(tighter budgets buy latency with joules: the router keeps "
           "cold routes off slow-loading SKUs; an infeasible budget "
           "degrades to latency-greedy, the best achievable p99)")
+
+    # -- replica auto-scaling: the over-provisioning parking tax ----------
+    auto = run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(90.0), service_model=svc,
+        autoscaler=ReplicaAutoscaler()))
+    print(f"\n{'breakeven + slo-aware (90 s) + replica autoscaler':56s}"
+          f" {auto.energy_wh:9.1f} {auto.requests_per_s:6.3f}"
+          f" {auto.p50_added_latency_s:6.2f}"
+          f" {auto.p99_added_latency_s:7.2f}")
+    d_wh = auto.energy_wh - slo_single.energy_wh
+    d_p99 = slo_single.p99_added_latency_s - auto.p99_added_latency_s
+    rate = f"{d_wh / d_p99:.1f}" if d_p99 > 0 else "n/a"
+    print(f"  {auto.scale_outs} scale-outs / {auto.scale_ins} scale-ins, "
+          f"peak {auto.peak_replicas()} replicas per route; "
+          f"cold starts {slo_single.cold_starts} -> {auto.cold_starts}")
+    print(f"  over-provisioned warm replicas buy {d_p99:.1f} s of p99 for "
+          f"{d_wh:+.1f} Wh ({rate} Wh per p99-second): the "
+          f"parking tax of keeping hot routes multi-replica, priced")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """Fleet orchestration: cluster-scale parking-tax simulation, placement,
 and routing across heterogeneous GPUs (see DESIGN in each module)."""
+from repro.fleet.autoscaler import (ReplicaAutoscaler, ScaleIn, ScaleOut)
 from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
-                                 ElectricityMix, GPUSku, build_fleet,
-                                 carbon_kg, energy_cost_usd,
-                                 fleet_price_usd, get_mix, get_sku)
+                                 ElectricityMix, GPUSku, above_base_load_j,
+                                 build_fleet, carbon_kg, energy_cost_usd,
+                                 fleet_price_usd, get_mix, get_sku,
+                                 marginal_park_w, scaleout_cost_j)
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
 from repro.fleet.router import (BreakevenRouter, Consolidator,
                                 EnergyGreedyRouter, LeastLoadedRouter,
@@ -17,7 +19,9 @@ from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
 __all__ = [
     "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
     "build_fleet", "carbon_kg", "energy_cost_usd", "fleet_price_usd",
-    "get_mix", "get_sku",
+    "get_mix", "get_sku", "above_base_load_j", "marginal_park_w",
+    "scaleout_cost_j",
+    "ReplicaAutoscaler", "ScaleOut", "ScaleIn",
     "Cluster", "FleetModelSpec", "RateEstimator",
     "Router", "ROUTERS", "WarmFirstRouter", "LeastLoadedRouter",
     "EnergyGreedyRouter", "BreakevenRouter", "SLOAwareRouter",

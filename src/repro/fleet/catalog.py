@@ -170,3 +170,34 @@ def fleet_price_usd(devices: Sequence[DeviceInstance], horizon_s: float,
     """Infrastructure (rental) cost of holding the fleet for the horizon."""
     hours = horizon_s / 3600.0
     return sum(d.sku.price_usd_per_hr(tier) for d in devices) * hours
+
+
+# ---------------------------------------------------------------------------
+# Scale-out placement costs (replica autoscaling).
+# ---------------------------------------------------------------------------
+
+def marginal_park_w(device: DeviceInstance, context_on: bool) -> float:
+    """Marginal power of holding ONE MORE warm replica on this device.
+
+    The DVFS step is per-device: a device that already has a live
+    context has paid it, so an extra replica parks for free there;
+    a bare device pays its full step the moment the context comes up.
+    This is the watt rate behind the over-provisioning parking tax."""
+    return 0.0 if context_on else device.profile.dvfs_step_w
+
+
+def above_base_load_j(device: DeviceInstance, loader) -> float:
+    """Above-bare-idle energy of one (re)load on this device (the
+    energy-exact reload cost the autoscaler's ski-rental tests use)."""
+    return max(loader.p_load_w - device.profile.p_base_w, 0.0) \
+        * loader.t_load_s
+
+
+def scaleout_cost_j(device: DeviceInstance, loader, hold_s: float, *,
+                    context_on: bool) -> float:
+    """Expected joules of placing one more warm replica on ``device``:
+    the above-bare load burst plus the marginal parking power held for
+    ``hold_s`` (the planner caps hold_s at the device's breakeven
+    window, so an always-idle replica is priced at one reload)."""
+    return (above_base_load_j(device, loader)
+            + marginal_park_w(device, context_on) * max(hold_s, 0.0))

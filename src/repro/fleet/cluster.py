@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
 from repro.core.scheduler import Policy
@@ -114,8 +114,15 @@ class Cluster:
             for did, d in self.devices.items()}
         self.specs: Dict[str, FleetModelSpec] = {}
         self.rates: Dict[str, RateEstimator] = {}
+        # per-(device, model) arrival attribution: the autoscaler's
+        # scale-in test needs each REPLICA's observed demand, not just
+        # the fleet-level lambda-hat the routers consume
+        self.rep_rates: Dict[Tuple[str, str], RateEstimator] = {}
         self._loaders: Dict[tuple, LoaderSpec] = {}
         self.migrations = 0
+        # per-route warm-replica-count timeline: (t_s, count) appended
+        # whenever snapshot_replicas observes a change
+        self.replica_log: Dict[str, List[Tuple[float, int]]] = {}
         # attached by the fleet event loop (run_fleet): per-device
         # DeviceRuntime (serving/slots.py) + the scenario's service-time
         # model.  Empty/None when the cluster is driven directly.
@@ -126,6 +133,13 @@ class Cluster:
     def register_model(self, spec: FleetModelSpec) -> None:
         self.specs[spec.model_id] = spec
         self.rates[spec.model_id] = RateEstimator()
+        self.replica_log[spec.model_id] = []
+
+    def replica_rate(self, device_id: str, model_id: str) -> RateEstimator:
+        key = (device_id, model_id)
+        if key not in self.rep_rates:
+            self.rep_rates[key] = RateEstimator()
+        return self.rep_rates[key]
 
     def loader_for(self, model_id: str, device_id: str) -> LoaderSpec:
         """Per-(model, device) LoaderSpec: this is what makes routing
@@ -214,6 +228,59 @@ class Cluster:
         rt = self.runtime.get(device_id)
         return rt.max_batch if rt is not None else 1
 
+    def queued_load_demand(self, device_id: str) -> Tuple[int, float]:
+        """(slots, vram_gb) that loads still QUEUED on this device's
+        loader channel will consume when they start.  Queued-not-started
+        loads are invisible to occupancy/free_vram_gb (only resident or
+        loading replicas count), so capacity planners that look across
+        ticks must add this on top of ``fits``."""
+        rt = self.runtime.get(device_id)
+        if rt is None:
+            return 0, 0.0
+        slots, vram = 0, 0.0
+        seen = set()
+        for item in rt.load_q:
+            mid = item[-1]
+            if mid in seen:               # load + queued migration race:
+                continue                  # only one of them will land
+            seen.add(mid)
+            m = self.managers[device_id].models.get(mid)
+            if m is not None and (m.resident or m.loading):
+                continue                  # already counted by occupancy
+            slots += 1
+            vram += self.specs[mid].vram_gb
+        return slots, vram
+
+    def pending_scaleouts(self, model_id: str) -> List[str]:
+        """Devices where this model's (re)load or migration is in flight
+        or queued on the loader channel but the replica is not resident
+        yet -- capacity that is COMING UP (the SLO router and the
+        autoscaler both count it, so neither double-provisions a route
+        mid-scale-out).  Queued migrations never enter ``load_queued``,
+        so the channel queue itself is scanned too."""
+        out = []
+        for did, rt in self.runtime.items():
+            if rt is None:
+                continue
+            m = self.managers[did].models.get(model_id)
+            if m is not None and m.resident:
+                continue
+            if (rt.loading == model_id or model_id in rt.load_queued
+                    or any(item[-1] == model_id for item in rt.load_q)):
+                out.append(did)
+        return sorted(out)
+
+    def snapshot_replicas(self, t_s: float) -> None:
+        """Append (t, warm-replica count) per route when the count moved.
+        The fleet event loop samples after every event, and advance_to
+        samples at each eviction instant it applies, so scale-out
+        landings AND timeout evictions are timestamped exactly."""
+        for mid in self.specs:
+            n = len(self.locations(mid, include_loading=False))
+            log = self.replica_log[mid]
+            if not log or log[-1][1] != n:
+                log.append((t_s, n))
+
     def load_residual_s(self, device_id: str, now_s: float) -> float:
         """Remaining seconds of the in-flight load (0 when idle)."""
         rt = self.runtime.get(device_id)
@@ -295,6 +362,7 @@ class Cluster:
             self.clock.advance(max(t_evt - self.clock(), 0.0))
             for mm in self.managers.values():
                 mm.tick()
+            self.snapshot_replicas(t_evt)
         self.clock.advance(max(target_s - self.clock(), 0.0))
 
     # -- request-path primitives (the fleet event loop sequences these) -----
@@ -304,6 +372,7 @@ class Cluster:
         replica's policy (at the true arrival time, as the single-device
         simulator does)."""
         self.rates[model_id].observe(t_s)
+        self.replica_rate(device_id, model_id).observe(t_s)
         self.replica(device_id, model_id).policy.observe_arrival(t_s)
 
     def start_load(self, device_id: str, model_id: str) -> float:
@@ -377,6 +446,22 @@ class Cluster:
             if not over():
                 break
             mm.unload(v.model_id)
+
+    # -- replica scale-in (autoscaler) --------------------------------------
+    def scale_in(self, device_id: str, model_id: str) -> bool:
+        """Retire one warm replica NOW, if it is safe to: resident, not
+        mid-load, no pinned/queued demand, no busy decode slots.  Returns
+        whether the replica was actually unloaded.  The device's meter
+        re-settles, so a fully drained device falls back to bare."""
+        m = self.managers[device_id].models.get(model_id)
+        if m is None or not m.resident or m.loading or m.pins > 0:
+            return False
+        if (self.busy_slots(device_id, model_id) > 0
+                or self.waiting_requests(device_id, model_id) > 0):
+            return False
+        self.managers[device_id].unload(model_id)
+        self.sync_power(device_id)
+        return True
 
     # -- migration ----------------------------------------------------------
     def start_migration(self, model_id: str, src_id: str, dst_id: str

@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.coldstart import loader_from_checkpoint
+from repro.fleet.autoscaler import ReplicaAutoscaler, ScaleOut
 from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
@@ -65,8 +66,9 @@ from repro.serving.slots import DeviceRuntime
 
 DAY = 24 * 3600.0
 
-# event phases at equal timestamps: completions < consolidation < arrivals
-_P_DONE, _P_CONS, _P_ARR = 0, 1, 2
+# event phases at equal timestamps:
+# completions < autoscale < consolidation < arrivals
+_P_DONE, _P_AUTO, _P_CONS, _P_ARR = 0, 1, 2, 3
 
 
 @dataclasses.dataclass
@@ -84,6 +86,7 @@ class FleetScenario:
     horizon_s: float = DAY
     service_s: float = 0.0                   # legacy constant service time
     consolidator: Optional[Consolidator] = None
+    autoscaler: Optional[ReplicaAutoscaler] = None
     zone: str = "USA"
     price_tier: str = "on_demand"
     # concurrency knobs: decode slots per resident model, and the
@@ -131,6 +134,19 @@ class FleetResult:
     carbon_kg: float
     # per-request added latency (queue wait + cold start), sorted
     latencies_s: Sequence[float] = ()
+    # per-route warm-replica-count timeline: model_id -> [(t_s, count)],
+    # one entry per change (autoscaler study instrument)
+    replica_timeline: Dict[str, List[Tuple[float, int]]] = \
+        dataclasses.field(default_factory=dict)
+    scale_outs: int = 0
+    scale_ins: int = 0
+
+    def peak_replicas(self, model_id: Optional[str] = None) -> int:
+        """Max concurrent warm replicas over the horizon (one route, or
+        the max across routes)."""
+        logs = ([self.replica_timeline.get(model_id, [])] if model_id
+                else list(self.replica_timeline.values()))
+        return max((n for log in logs for _, n in log), default=0)
 
     @property
     def mean_added_latency_s(self) -> float:
@@ -165,6 +181,8 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     sc = scenario
     router = get_router(sc.router) if isinstance(sc.router, str) else sc.router
     svc = sc.resolved_service_model()
+    if sc.autoscaler is not None:
+        sc.autoscaler.reset()
     cluster = Cluster(sc.devices)
     for fm in sc.models:
         cluster.register_model(fm.spec)
@@ -199,9 +217,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
                 push(a, _P_ARR, "arrival", (fm.spec.model_id,))
     if sc.consolidator is not None and sc.consolidator.period_s < sc.horizon_s:
         push(sc.consolidator.period_s, _P_CONS, "consolidate", ())
+    if sc.autoscaler is not None and sc.autoscaler.tick_s < sc.horizon_s:
+        push(sc.autoscaler.tick_s, _P_AUTO, "autoscale", ())
 
     rt = {did: DeviceRuntime(sc.max_batch) for did in cluster.devices}
     cluster.attach_runtime(rt, svc)
+    cluster.snapshot_replicas(0.0)            # timeline origin (prewarms)
 
     def begin_request(did: str, mid: str, arrival_t: float,
                       now: float) -> None:
@@ -319,6 +340,36 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             cluster.end_serve(did, mid)
             drain_waiting(did, mid, t)
             cluster.sync_power(did)
+        elif kind == "autoscale":
+            for act in sc.autoscaler.plan(cluster, t):
+                if isinstance(act, ScaleOut):
+                    r = rt[act.dst]
+                    m = cluster.replica(act.dst, act.model_id)
+                    q_slots, q_vram = cluster.queued_load_demand(act.dst)
+                    lost_fit = (
+                        cluster.free_slots(act.dst) - q_slots < 1
+                        or cluster.free_vram_gb(act.dst) - q_vram
+                        < cluster.specs[act.model_id].vram_gb)
+                    queued_mig = any(item[-1] == act.model_id
+                                     for item in r.load_q)
+                    if (m.resident or m.loading or queued_mig
+                            or act.model_id in r.load_queued or lost_fit):
+                        continue      # raced a routed load/mig, lost fit
+                    # the controller owns this replica's lifetime: it
+                    # parks through lulls (held) until scale-in retires
+                    # it -- that standing warmth is the over-provisioning
+                    # parking tax the bench quantifies
+                    m.held = True
+                    r.load_queued.add(act.model_id)
+                    r.load_q.append(("load", act.model_id))
+                    sc.autoscaler.scale_outs += 1
+                    pump_loader(act.dst, t)
+                    cluster.sync_power(act.dst)
+                elif cluster.scale_in(act.src, act.model_id):
+                    sc.autoscaler.scale_ins += 1
+            nxt = t + sc.autoscaler.tick_s
+            if nxt < sc.horizon_s:
+                push(nxt, _P_AUTO, "autoscale", ())
         elif kind == "consolidate":
             busy_map = {did: r.busy for did, r in rt.items()}
             for mv in sc.consolidator.plan(cluster, t, busy_map):
@@ -328,10 +379,13 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             nxt = t + sc.consolidator.period_s
             if nxt < sc.horizon_s:
                 push(nxt, _P_CONS, "consolidate", ())
+        if kind != "serve_done":      # serving never changes residency
+            cluster.snapshot_replicas(t)
 
     # trailing idle out to the horizon (a load may overshoot it, exactly
     # as the single-device simulator lets the final burst overshoot)
     cluster.advance_to(max(sc.horizon_s, cluster.clock()))
+    cluster.snapshot_replicas(cluster.clock())
 
     totals = cluster.device_totals()
     reports = []
@@ -367,7 +421,11 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         infra_usd=fleet_price_usd(sc.devices, sc.horizon_s, sc.price_tier),
         energy_usd=energy_cost_usd(energy, mix),
         carbon_kg=carbon_kg(energy, mix),
-        latencies_s=np.sort(np.asarray(samples, dtype=float)))
+        latencies_s=np.sort(np.asarray(samples, dtype=float)),
+        replica_timeline={mid: list(log)
+                          for mid, log in cluster.replica_log.items()},
+        scale_outs=(sc.autoscaler.scale_outs if sc.autoscaler else 0),
+        scale_ins=(sc.autoscaler.scale_ins if sc.autoscaler else 0))
 
 
 # ---------------------------------------------------------------------------
@@ -430,7 +488,9 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
                          horizon_s: float = DAY, seed: int = 100,
                          service_s: float = 0.0,
                          service_model: Optional[ServiceTimeModel] = None,
-                         max_batch: int = 4) -> FleetScenario:
+                         max_batch: int = 4,
+                         autoscaler: Optional[ReplicaAutoscaler] = None
+                         ) -> FleetScenario:
     """The ISSUE's reference scenario (shared by bench_fleet and the
     fleet_parking example): N models under a diurnal + bursty +
     heavy-tail + steady traffic rotation on a mixed-architecture fleet.
@@ -455,14 +515,16 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
     return FleetScenario(devices=devices, models=models, router=router,
                          horizon_s=horizon_s, service_s=service_s,
                          service_model=service_model, max_batch=max_batch,
-                         consolidator=Consolidator() if consolidate else None)
+                         consolidator=Consolidator() if consolidate else None,
+                         autoscaler=autoscaler)
 
 
 def single_device_scenario(arrivals_s: Sequence[float], policy_factory,
                            loader, sku_key: str = "h100", *,
                            horizon_s: float = DAY, start_warm: bool = True,
-                           service_s: float = 0.0,
-                           max_batch: int = 1) -> FleetScenario:
+                           service_s: float = 0.0, max_batch: int = 1,
+                           autoscaler: Optional[ReplicaAutoscaler] = None
+                           ) -> FleetScenario:
     """1 device x 1 model -- the fleet degenerate case that must agree
     with ``core.simulator.simulate`` (tested to 1e-6 Wh).  max_batch
     defaults to 1 because the reference simulator serializes service;
@@ -474,4 +536,5 @@ def single_device_scenario(arrivals_s: Sequence[float], policy_factory,
     return FleetScenario(devices=devices,
                          models=[FleetModel(spec, list(arrivals_s))],
                          router="warm-first", horizon_s=horizon_s,
-                         service_s=service_s, max_batch=max_batch)
+                         service_s=service_s, max_batch=max_batch,
+                         autoscaler=autoscaler)

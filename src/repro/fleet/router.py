@@ -40,14 +40,16 @@ import math
 from typing import List, Optional, Tuple
 
 from repro.core.breakeven import breakeven_seconds
+from repro.fleet.catalog import above_base_load_j, marginal_park_w
 from repro.fleet.cluster import Cluster
 
 
 def _above_base_load_j(cluster: Cluster, model_id: str, device_id: str
                        ) -> float:
-    ld = cluster.loader_for(model_id, device_id)
-    prof = cluster.devices[device_id].profile
-    return max(ld.p_load_w - prof.p_base_w, 0.0) * ld.t_load_s
+    """Above-bare reload energy, from the shared catalog cost model (one
+    formula for routers, consolidator, and autoscaler placement)."""
+    return above_base_load_j(cluster.devices[device_id],
+                             cluster.loader_for(model_id, device_id))
 
 
 class Router:
@@ -71,8 +73,26 @@ class Router:
                                     -cluster.free_vram_gb(did), did))
 
     def _warm(self, model_id: str, cluster: Cluster) -> Optional[str]:
+        """Least-pressure member of the warm replica set.  With one
+        replica this is the old single-location behaviour; once the
+        autoscaler grows the set, every router spreads requests to the
+        member with the shortest queue (waiters, then busy slots, then
+        stable id) instead of hot-spotting the first device.  A replica
+        still mid-load counts as a FULL pool of busy slots, so it never
+        outranks a resident replica with free capacity (requests would
+        otherwise park behind the load residual)."""
         locs = cluster.locations(model_id, include_loading=True)
-        return locs[0] if locs else None
+        if not locs:
+            return None
+
+        def key(d: str):
+            m = cluster.managers[d].models.get(model_id)
+            loading_penalty = 0 if (m is not None and m.resident) \
+                else cluster.decode_slots(d)
+            return (cluster.waiting_requests(d, model_id),
+                    cluster.busy_slots(d, model_id) + loading_penalty, d)
+
+        return min(locs, key=key)
 
     def _joule_score(self, model_id: str, cluster: Cluster, *,
                      steady_state: bool):
@@ -89,7 +109,8 @@ class Router:
             prof = cluster.devices[did].profile
             ld = cluster.loader_for(model_id, did)
             load_j = _above_base_load_j(cluster, model_id, did)
-            step_w = 0.0 if cluster.context_on(did) else prof.dvfs_step_w
+            step_w = marginal_park_w(cluster.devices[did],
+                                     cluster.context_on(did))
             t_star = breakeven_seconds(ld, prof, paper_convention=False)
             park_j = step_w * min(gap, t_star)
             if steady_state:
@@ -196,7 +217,13 @@ class SLOAwareRouter(Router):
 
     def choose(self, model_id, t_s, cluster) -> str:
         warm = set(cluster.locations(model_id, include_loading=True))
-        cands = sorted(set(self._placeable(model_id, cluster)) | warm)
+        # pending scale-outs are FUTURE capacity: their load is already
+        # paid for, so they compete at zero joules -- the router parks
+        # requests behind a landing replica instead of cold-starting a
+        # third copy elsewhere
+        pending = set(cluster.pending_scaleouts(model_id))
+        cands = sorted(set(self._placeable(model_id, cluster))
+                       | warm | pending)
         est = {d: self.estimated_wait_s(model_id, d, t_s, cluster)
                for d in cands}
         budget = self.budget_s * self.headroom
@@ -206,7 +233,7 @@ class SLOAwareRouter(Router):
         score = self._joule_score(model_id, cluster, steady_state=True)
 
         def key(d: str):
-            joules = 0.0 if d in warm else score(d)[0]
+            joules = 0.0 if d in warm or d in pending else score(d)[0]
             return (joules, est[d], d)
 
         return min(ok, key=key)
@@ -293,6 +320,13 @@ class Consolidator:
             mm = cluster.managers[src]
             residents = [m for m in mm.models.values() if m.resident]
             if not residents or any(m.loading for m in mm.models.values()):
+                continue
+            # autoscaler-held replicas are not packing fodder: the
+            # controller paid their load to keep that capacity standing,
+            # and a migration would strip the hold (the destination
+            # re-arms a policy timeout) -- skip the device (drain is
+            # all-or-nothing anyway)
+            if any(m.held for m in residents):
                 continue
             # counterfactual: src pays its step until the last armed
             # timeout fires (capped so always-on compares finitely)

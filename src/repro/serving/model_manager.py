@@ -45,6 +45,10 @@ class ManagedModel:
     vram_gb: float = 0.0                          # capacity accounting only
     evict_at: float = math.inf
     pins: int = 0          # queued demand holding the model (fleet layer)
+    # autoscaler-held replica: exempt from the policy's idle timeout --
+    # it stays warm through lulls (paying the parking tax) until the
+    # autoscaler's own breakeven scale-in test retires it
+    held: bool = False
     cold_starts: int = 0
     requests: int = 0
     added_latency_s: float = 0.0
@@ -118,6 +122,7 @@ class ModelManager:
         m.engine = None                      # frees device buffers
         m.resident = False
         m.evict_at = math.inf
+        m.held = False
         # only fall to bare from parked: mid-load/mid-service the burst
         # power keeps metering until that phase closes
         if not self._any_resident() and self.meter.state == "parked":
@@ -160,8 +165,13 @@ class ModelManager:
         self.arm(model_id)
 
     def arm(self, model_id: str) -> None:
-        """(Re)arm a model's idle-eviction deadline from its policy."""
+        """(Re)arm a model's idle-eviction deadline from its policy.
+        Autoscaler-held replicas never arm: the controller owns their
+        lifetime (scale-in), not the per-replica policy."""
         m = self.models[model_id]
+        if m.held:
+            m.evict_at = math.inf
+            return
         timeout = m.policy.idle_timeout_s(self.clock())
         m.evict_at = self.clock() + timeout if math.isfinite(timeout) \
             else math.inf
@@ -188,6 +198,7 @@ class ModelManager:
             m.loading = False
             m.evict_at = math.inf
             m.pins = 0
+            m.held = False
         self.meter.transition("bare")
 
     # -- request path --------------------------------------------------------

@@ -18,10 +18,11 @@ from repro.core.scheduler import AlwaysOn, Breakeven, FixedTTL
 from repro.core import traffic
 from repro.core.simulator import simulate
 from repro.fleet import (CATALOG, Cluster, Consolidator, FleetModel,
-                         FleetModelSpec, FleetScenario, SLOAwareRouter,
-                         build_fleet, carbon_kg, energy_cost_usd, get_mix,
-                         get_router, get_sku, mixed_fleet_scenario,
-                         run_fleet, single_device_scenario)
+                         FleetModelSpec, FleetScenario, ReplicaAutoscaler,
+                         SLOAwareRouter, build_fleet, carbon_kg,
+                         energy_cost_usd, get_mix, get_router, get_sku,
+                         mixed_fleet_scenario, run_fleet,
+                         single_device_scenario)
 from repro.serving import (ConstantServiceTime, DeviceRuntime,
                            ModelServiceProfile, RequestShape,
                            RooflineServiceTime)
@@ -610,6 +611,45 @@ def test_slo_router_meets_budget_on_mixed_scenario():
     assert slo.p99_added_latency_s <= budget
     assert eg.p99_added_latency_s > budget         # budget actually binds
     assert abs(slo.energy_wh / eg.energy_wh - 1.0) <= 0.10
+
+
+def test_single_device_equivalence_survives_autoscaler():
+    """Acceptance anchor (ISSUE 3): 1 device x 1 model with the
+    autoscaler ENABLED still reproduces core/simulator.py to 1e-6 Wh --
+    a single route on a single device must never scale."""
+    for pattern in ("bursty", "mmpp"):
+        arr = traffic.PATTERNS[pattern](seed=7)
+        sim = simulate(arr, FixedTTL(300.0), H100, PYTORCH_70B)
+        res = run_fleet(single_device_scenario(
+            arr, lambda: FixedTTL(300.0), PYTORCH_70B, "h100",
+            autoscaler=ReplicaAutoscaler(tick_s=60.0, cooldown_s=60.0,
+                                         pressure_hi=0.25)))
+        assert res.energy_wh == pytest.approx(sim.energy_wh, abs=1e-6)
+        assert res.cold_starts == sim.cold_starts
+        assert res.scale_outs == 0 and res.scale_ins == 0
+        assert res.peak_replicas() <= 1
+
+
+def test_autoscaled_slo_improves_p99_at_pinned_energy_delta():
+    """Acceptance (ISSUE 3): on the 10-model x 6-GPU day with roofline
+    service times, autoscaled SLO-aware routing buys a double-digit p99
+    improvement over single-replica SLO-aware for a bounded energy
+    premium -- the over-provisioning parking tax, visible as a strict
+    parking_tax_wh increase.  (Measured at seed 100: p99 78.0 -> 62.9 s,
+    +17.6% Wh, parking tax 594 -> 2111 Wh.)"""
+    svc = RooflineServiceTime()
+    single = run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(90.0), service_model=svc, seed=100))
+    auto = run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(90.0), service_model=svc, seed=100,
+        autoscaler=ReplicaAutoscaler()))
+    assert auto.p99_added_latency_s <= single.p99_added_latency_s - 10.0
+    assert auto.cold_starts < single.cold_starts
+    assert auto.scale_outs > 0 and auto.peak_replicas() >= 2
+    # pinned energy band: the tax is real but bounded
+    delta = auto.energy_wh / single.energy_wh - 1.0
+    assert 0.05 <= delta <= 0.25
+    assert auto.parking_tax_wh > single.parking_tax_wh
 
 
 def test_device_runtime_invariants():

@@ -1,0 +1,354 @@
+"""Property-based + metamorphic fleet invariants (ISSUE 3 satellite).
+
+Two PRs of hand-picked scenarios pinned exact numbers; this suite pins
+the INVARIANTS those numbers are instances of, over randomized seeded
+scenarios: energy conservation (fleet Wh is the sum of device meters),
+non-negativity, the clairvoyant floor under every router (autoscaled
+included), latency-accounting consistency, and the autoscaler's safety
+contract (max_replicas=1 is trace-identical to no autoscaler; a single
+device never scales; replica counts respect the cap).
+
+Runs with real ``hypothesis`` when installed, and under the
+deterministic mini-runner in ``tests/_hypothesis_shim.py`` otherwise
+(per-test seeded example streams, so failures reproduce run-to-run).
+
+The metamorphic monotonicity laws are scoped to always-on fleets on
+purpose: with an eviction policy, an EXTRA arrival can legitimately
+*save* energy by bridging a gap that would otherwise pay an eviction
+plus a reload (ski rental: step * gap < step * T* + reload), so
+"more traffic => more energy" is only a law when nothing evicts.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, st
+
+from repro.core import QWEN25_7B_MEASURED
+from repro.core import traffic
+from repro.core.scheduler import AlwaysOn, Breakeven, FixedTTL
+from repro.fleet import (Cluster, FleetModel, FleetModelSpec, FleetScenario,
+                         ReplicaAutoscaler, build_fleet, marginal_park_w,
+                         run_fleet, scaleout_cost_j)
+from repro.serving import ConstantServiceTime, DeviceRuntime
+
+GB = 1024 ** 3
+HOUR = 3600.0
+ROUTERS = ("warm-first", "least-loaded", "energy-greedy", "breakeven-aware",
+           "slo-aware")
+PATTERNS = ("steady", "bursty", "diurnal", "mmpp")
+POLICIES = {"always-on": AlwaysOn, "breakeven": Breakeven,
+            "ttl-10min": lambda: FixedTTL(600.0)}
+
+
+def _scenario(seed, *, router="warm-first", policy="breakeven",
+              fleet="h100+a100+l40s", n_models=3, horizon_s=6 * HOUR,
+              service_s=0.0, autoscaler=None, prewarm=True,
+              max_batch=2) -> FleetScenario:
+    """Randomized-but-seeded scenario: patterns, sizes, and homes all
+    derive from ``seed``, so every drawn example is reproducible."""
+    rng = np.random.default_rng(seed)
+    devices = build_fleet(fleet)
+    models = []
+    for i in range(n_models):
+        pat = PATTERNS[int(rng.integers(len(PATTERNS)))]
+        arr = traffic.PATTERNS[pat](seed=seed + 17 * i)
+        arr = arr[arr < horizon_s]
+        ckpt_gb = float(rng.uniform(3.0, 20.0))
+        home = devices[int(rng.integers(len(devices)))].instance_id \
+            if prewarm else None
+        spec = FleetModelSpec(
+            model_id=f"m{i}", policy_factory=POLICIES[policy],
+            checkpoint_bytes=int(ckpt_gb * GB), vram_gb=ckpt_gb * 1.1,
+            home=home)
+        models.append(FleetModel(spec, arr))
+    return FleetScenario(devices=devices, models=models, router=router,
+                         horizon_s=horizon_s, service_s=service_s,
+                         max_batch=max_batch, autoscaler=autoscaler)
+
+
+# ---------------------------------------------------------------------------
+# conservation / non-negativity / bounds
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(ROUTERS))
+@settings(max_examples=10, deadline=None)
+def test_fleet_energy_is_sum_of_device_meters(seed, router):
+    res = run_fleet(_scenario(seed, router=router))
+    assert res.energy_wh == pytest.approx(
+        sum(d.total_wh for d in res.devices), rel=1e-12)
+    for d in res.devices:
+        parts = sum(v for k, v in d.energy_wh.items() if k != "total")
+        assert d.total_wh == pytest.approx(parts, rel=1e-12)
+
+
+@given(st.integers(0, 10_000), st.sampled_from(list(POLICIES)))
+@settings(max_examples=10, deadline=None)
+def test_all_energies_nonnegative(seed, policy):
+    res = run_fleet(_scenario(seed, policy=policy,
+                              autoscaler=ReplicaAutoscaler()))
+    assert res.energy_wh >= 0.0
+    assert res.parking_tax_wh >= 0.0
+    for d in res.devices:
+        assert d.parking_tax_wh >= -1e-12
+        for state, wh in d.energy_wh.items():
+            assert wh >= -1e-12, (d.instance_id, state)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_clairvoyant_bound_floors_every_router(seed):
+    """The offline lower bound never exceeds ANY online policy's energy
+    -- autoscaled routers included (held replicas only ADD warm time)."""
+    for router in ROUTERS:
+        for scaler in (None, ReplicaAutoscaler()):
+            res = run_fleet(_scenario(seed, router=router,
+                                      autoscaler=scaler))
+            assert res.energy_wh >= res.lb_shared_wh - 1e-6, \
+                (router, scaler is not None)
+            assert res.cv_per_model_wh >= res.lb_shared_wh - 1e-9
+
+
+@given(st.integers(0, 10_000), st.sampled_from(ROUTERS))
+@settings(max_examples=10, deadline=None)
+def test_savings_vs_is_bounded(seed, router):
+    base = run_fleet(_scenario(seed, policy="always-on"))
+    res = run_fleet(_scenario(seed, router=router))
+    s = res.savings_vs(base)
+    assert math.isfinite(s) and s <= 1.0
+    import dataclasses
+    assert res.savings_vs(dataclasses.replace(base, energy_wh=0.0)) == 0.0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_latency_accounting_consistent(seed):
+    res = run_fleet(_scenario(seed, router="slo-aware", service_s=5.0))
+    lat = np.asarray(res.latencies_s)
+    assert lat.size == res.requests
+    assert (lat >= 0.0).all()
+    assert (np.diff(lat) >= 0.0).all()                 # sorted
+    assert lat.sum() == pytest.approx(res.added_latency_s_total, rel=1e-9)
+    assert res.p50_added_latency_s <= res.p99_added_latency_s + 1e-12
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_requests_conserved(seed):
+    sc = _scenario(seed, router="energy-greedy")
+    expected = sum(len(fm.arrivals_s) for fm in sc.models)
+    res = run_fleet(sc)
+    assert res.requests == expected
+
+
+# ---------------------------------------------------------------------------
+# autoscaler safety contract
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(2, 3))
+@settings(max_examples=10, deadline=None)
+def test_autoscaler_respects_max_replicas(seed, cap):
+    scaler = ReplicaAutoscaler(max_replicas=cap, tick_s=60.0,
+                               cooldown_s=60.0, pressure_hi=0.25)
+    res = run_fleet(_scenario(seed, router="warm-first", service_s=20.0,
+                              autoscaler=scaler))
+    assert res.peak_replicas() <= cap
+    for mid, log in res.replica_timeline.items():
+        for _, n in log:
+            assert 0 <= n <= cap, mid
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["h100", "a100", "l40s"]))
+@settings(max_examples=10, deadline=None)
+def test_single_device_fleet_never_scales(seed, sku):
+    """A single route on a single device must never scale -- the
+    equivalence anchor to core/simulator.py depends on it."""
+    scaler = ReplicaAutoscaler(tick_s=60.0, pressure_hi=0.1,
+                               pressure_lo=0.05, cooldown_s=60.0)
+    res = run_fleet(_scenario(seed, fleet=sku, n_models=1,
+                              service_s=30.0, autoscaler=scaler))
+    assert res.scale_outs == 0 and res.scale_ins == 0
+    assert res.peak_replicas() <= 1
+
+
+@given(st.integers(0, 10_000), st.sampled_from(ROUTERS))
+@settings(max_examples=8, deadline=None)
+def test_autoscaler_max_replicas_one_is_trace_identical(seed, router):
+    """max_replicas=1 disables the controller outright: same joules,
+    same cold starts, same per-request latencies as no autoscaler."""
+    plain = run_fleet(_scenario(seed, router=router, service_s=10.0))
+    gated = run_fleet(_scenario(
+        seed, router=router, service_s=10.0,
+        autoscaler=ReplicaAutoscaler(max_replicas=1, tick_s=30.0)))
+    assert gated.energy_wh == pytest.approx(plain.energy_wh, rel=1e-12)
+    assert gated.cold_starts == plain.cold_starts
+    assert gated.migrations == plain.migrations
+    np.testing.assert_allclose(gated.latencies_s, plain.latencies_s,
+                               rtol=0, atol=1e-12)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_replica_timeline_well_formed(seed):
+    res = run_fleet(_scenario(seed, router="slo-aware", service_s=15.0,
+                              autoscaler=ReplicaAutoscaler(tick_s=120.0)))
+    for mid, log in res.replica_timeline.items():
+        times = [t for t, _ in log]
+        counts = [n for _, n in log]
+        assert times == sorted(times)
+        assert all(n >= 0 for n in counts)
+        # entries only on change: consecutive counts differ
+        assert all(a != b for a, b in zip(counts, counts[1:]))
+        assert res.peak_replicas(mid) == max(counts, default=0)
+
+
+# ---------------------------------------------------------------------------
+# metamorphic laws
+# ---------------------------------------------------------------------------
+
+def _always_on_scenario(seed, arrivals_by_model, devices):
+    models = []
+    for i, arr in enumerate(arrivals_by_model):
+        spec = FleetModelSpec(
+            model_id=f"m{i}", policy_factory=AlwaysOn,
+            checkpoint_bytes=int(8 * GB), vram_gb=9.0,
+            home=devices[i % 2].instance_id)     # homes on the first two
+        models.append(FleetModel(spec, arr))
+    return FleetScenario(devices=devices, models=models,
+                         router="warm-first", horizon_s=6 * HOUR,
+                         service_model=ConstantServiceTime(5.0),
+                         max_batch=2)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_doubling_arrivals_never_decreases_energy_always_on(seed):
+    """Metamorphic: with always-on fleets (nothing evicts, so no reload
+    can be bridged away) every added request adds >= 0 joules."""
+    arrs = [traffic.PATTERNS["steady"](seed=seed)[:200],
+            traffic.PATTERNS["bursty"](seed=seed + 1)[:200]]
+    arrs = [a[a < 6 * HOUR] for a in arrs]
+    doubled = [np.sort(np.concatenate([a, a[:-1] + np.diff(a) / 2.0]))
+               for a in arrs]
+    base = run_fleet(_always_on_scenario(seed, arrs, build_fleet("h100+a100")))
+    up = run_fleet(_always_on_scenario(seed, doubled,
+                                       build_fleet("h100+a100")))
+    assert up.requests > base.requests
+    assert up.energy_wh >= base.energy_wh - 1e-9
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["l40s", "a100", "tpu_v5e"]))
+@settings(max_examples=10, deadline=None)
+def test_empty_device_costs_at_most_its_bare_idle_floor(seed, extra_sku):
+    """Metamorphic: an extra device nobody routes to adds exactly its
+    bare-idle energy -- never more (warm-first with everything prewarmed
+    never touches it)."""
+    arrs = [traffic.PATTERNS["diurnal"](seed=seed)]
+    arrs = [a[a < 6 * HOUR] for a in arrs]
+    small = build_fleet("h100+a100")
+    big = build_fleet("h100+a100+" + extra_sku)
+    base = run_fleet(_always_on_scenario(seed, arrs, small))
+    grown = run_fleet(_always_on_scenario(seed, arrs, big))
+    extra = {d.instance_id: d for d in grown.devices}[big[-1].instance_id]
+    # the stranger idles at bare power for the whole metered window
+    # (which may overshoot the horizon by the final service burst) and
+    # contributes not one joule more
+    assert extra.energy_wh.get("bare", 0.0) == \
+        pytest.approx(extra.total_wh, rel=1e-12)
+    assert extra.total_wh >= \
+        big[-1].profile.p_base_w * 6 * HOUR / 3600.0 - 1e-9
+    assert grown.energy_wh == \
+        pytest.approx(base.energy_wh + extra.total_wh, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit checks (no strategies)
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_plan_empty_when_disabled_or_single_device():
+    cluster = Cluster(build_fleet("h100"))
+    cluster.register_model(FleetModelSpec(
+        "m", AlwaysOn, loader=QWEN25_7B_MEASURED, vram_gb=5.0))
+    cluster.replica("h100-0", "m")
+    cluster.managers["h100-0"].prewarm("m")
+    assert ReplicaAutoscaler().plan(cluster, 0.0) == []      # one device
+    two = Cluster(build_fleet("h100+a100"))
+    two.register_model(FleetModelSpec(
+        "m", AlwaysOn, loader=QWEN25_7B_MEASURED, vram_gb=5.0))
+    two.replica("h100-0", "m")
+    two.managers["h100-0"].prewarm("m")
+    assert ReplicaAutoscaler(max_replicas=1).plan(two, 0.0) == []
+
+
+def test_scale_in_refuses_unsafe_replicas():
+    cluster = Cluster(build_fleet("h100+a100"))
+    cluster.register_model(FleetModelSpec(
+        "m", AlwaysOn, loader=QWEN25_7B_MEASURED, vram_gb=5.0))
+    rt = {did: DeviceRuntime(2) for did in cluster.devices}
+    cluster.attach_runtime(rt, ConstantServiceTime(0.0))
+    m = cluster.replica("h100-0", "m")
+    assert not cluster.scale_in("h100-0", "m")               # not resident
+    cluster.managers["h100-0"].prewarm("m")
+    m.pins = 1
+    assert not cluster.scale_in("h100-0", "m")               # pinned demand
+    m.pins = 0
+    slot = rt["h100-0"].pool("m").acquire()
+    assert not cluster.scale_in("h100-0", "m")               # busy slot
+    rt["h100-0"].pool("m").release(slot)
+    rt["h100-0"].wait_q("m").append(1.0)
+    assert not cluster.scale_in("h100-0", "m")               # queued demand
+    rt["h100-0"].wait_q("m").clear()
+    assert cluster.scale_in("h100-0", "m")                   # safe now
+    assert cluster.managers["h100-0"].meter.state == "bare"
+
+
+def test_scaleout_cost_monotone_and_context_aware():
+    dev = build_fleet("h100")[0]
+    ld = QWEN25_7B_MEASURED
+    c0 = scaleout_cost_j(dev, ld, 0.0, context_on=False)
+    c1 = scaleout_cost_j(dev, ld, 600.0, context_on=False)
+    c2 = scaleout_cost_j(dev, ld, 3600.0, context_on=False)
+    assert c0 <= c1 <= c2                        # monotone in hold time
+    assert marginal_park_w(dev, True) == 0.0
+    assert scaleout_cost_j(dev, ld, 3600.0, context_on=True) == \
+        pytest.approx(c0)                        # context-on parks free
+
+
+def test_held_replica_survives_lull_then_policy_replica_evicts():
+    """End-to-end: a burst scales the route out; the held replica stays
+    warm through a lull that evicts the policy-armed primary, so the
+    post-lull burst is served warm (no reload) and total queueing falls
+    vs the single-replica run."""
+    ld = QWEN25_7B_MEASURED
+    burst = [float(t) for t in range(100, 160, 4)]           # 15 reqs
+    late = [5000.0, 5004.0]
+
+    def run(scaler):
+        spec = FleetModelSpec("hot", lambda: FixedTTL(300.0), loader=ld,
+                              vram_gb=5.0, home="h100-0")
+        return run_fleet(FleetScenario(
+            devices=build_fleet("h100+a100"),
+            models=[FleetModel(spec, burst + late)],
+            router="warm-first", horizon_s=8000.0, service_s=30.0,
+            max_batch=2, autoscaler=scaler))
+
+    plain = run(None)
+    auto = run(ReplicaAutoscaler(tick_s=20.0, cooldown_s=20.0,
+                                 pressure_hi=0.5, max_replicas=2))
+    assert auto.scale_outs == 1 and auto.peak_replicas("hot") == 2
+    # same cold-start budget: the scale-out load REPLACES the t=5000
+    # reload the single-replica run pays (prewarm + one load each)
+    assert plain.cold_starts == auto.cold_starts == 2
+    # plain goes cold before the late burst; the held replica does not
+    counts_at_late = [n for t, n in plain.replica_timeline["hot"]
+                      if t <= late[0]]
+    assert counts_at_late[-1] == 0
+    assert [n for t, n in auto.replica_timeline["hot"]][-1] >= 1
+    # the second replica halves the burst queue and kills the reload
+    # wait: strictly less total added latency, strictly smaller max
+    assert auto.added_latency_s_total < plain.added_latency_s_total
+    assert max(auto.latencies_s) < max(plain.latencies_s)
