@@ -14,7 +14,12 @@ import dataclasses
 from typing import Dict, List
 
 T_YEAR_HR = 8760.0
-US_GRID_KG_CO2_PER_KWH = 0.39   # ~ paper's "180 kT at 462 GWh"
+# Single source of truth for the US grid intensity: the paper's "180 kT
+# at 462 GWh" pins this value, and fleet/catalog.py DERIVES its
+# MIXES["USA"].gwp_kg_per_kwh from it (core cannot import fleet, so the
+# dependency points from fleet to here; regression-tested in
+# tests/test_carbon.py).
+US_GRID_KG_CO2_PER_KWH = 0.39
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,16 +1,21 @@
 """Fleet orchestration: cluster-scale parking-tax simulation, placement,
-and routing across heterogeneous GPUs (see DESIGN in each module)."""
+routing, replica autoscaling, and carbon-intensity-aware scheduling
+across heterogeneous GPUs (see DESIGN in each module; docs/ARCHITECTURE.md
+maps the layers)."""
 from repro.fleet.autoscaler import (ReplicaAutoscaler, ScaleIn, ScaleOut)
+from repro.fleet.carbon import (CarbonBreakeven, CarbonTrace, TRACE_SHAPES,
+                                carbon_timeline_kg, flat_trace, make_trace,
+                                solar_duck, trace_for_zone, wind_night)
 from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
                                  ElectricityMix, GPUSku, above_base_load_j,
                                  build_fleet, carbon_kg, energy_cost_usd,
                                  fleet_price_usd, get_mix, get_sku,
                                  marginal_park_w, scaleout_cost_j)
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
-from repro.fleet.router import (BreakevenRouter, Consolidator,
-                                EnergyGreedyRouter, LeastLoadedRouter,
-                                Move, ROUTERS, Router, SLOAwareRouter,
-                                WarmFirstRouter, get_router)
+from repro.fleet.router import (BreakevenRouter, CarbonAwareRouter,
+                                Consolidator, EnergyGreedyRouter,
+                                LeastLoadedRouter, Move, ROUTERS, Router,
+                                SLOAwareRouter, WarmFirstRouter, get_router)
 from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
                                   FleetScenario, clairvoyant_bound,
                                   mixed_fleet_scenario, run_fleet,
@@ -21,11 +26,13 @@ __all__ = [
     "build_fleet", "carbon_kg", "energy_cost_usd", "fleet_price_usd",
     "get_mix", "get_sku", "above_base_load_j", "marginal_park_w",
     "scaleout_cost_j",
+    "CarbonBreakeven", "CarbonTrace", "TRACE_SHAPES", "carbon_timeline_kg",
+    "flat_trace", "make_trace", "solar_duck", "trace_for_zone", "wind_night",
     "ReplicaAutoscaler", "ScaleOut", "ScaleIn",
     "Cluster", "FleetModelSpec", "RateEstimator",
     "Router", "ROUTERS", "WarmFirstRouter", "LeastLoadedRouter",
     "EnergyGreedyRouter", "BreakevenRouter", "SLOAwareRouter",
-    "Consolidator", "Move", "get_router",
+    "CarbonAwareRouter", "Consolidator", "Move", "get_router",
     "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
     "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
     "clairvoyant_bound",

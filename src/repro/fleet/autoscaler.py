@@ -44,18 +44,24 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Union
 
-from repro.fleet.catalog import marginal_park_w, scaleout_cost_j
+from repro.fleet.carbon import CarbonTrace, _J_PER_KWH
+from repro.fleet.catalog import (above_base_load_j, marginal_park_w,
+                                 scaleout_cost_j)
 from repro.fleet.cluster import Cluster
 
 
 @dataclasses.dataclass(frozen=True)
 class ScaleOut:
+    """Plan action: load one more warm replica of ``model_id`` on
+    device ``dst`` (applied through the device's loader channel)."""
     model_id: str
     dst: str
 
 
 @dataclasses.dataclass(frozen=True)
 class ScaleIn:
+    """Plan action: retire the warm replica of ``model_id`` on device
+    ``src`` (applied via ``Cluster.scale_in``, which re-checks safety)."""
     model_id: str
     src: str
 
@@ -84,12 +90,23 @@ class ReplicaAutoscaler:
                     held replica the moment a burst ends and put the
                     NEXT burst back on a cold start -- patience keeps
                     the latency half of the trade from thrashing.
+      carbon_aware  price the breakeven tests in kgCO2e against the
+                    run's grid-intensity trace (bound by ``run_fleet``
+                    via ``set_carbon_trace``) instead of joules: the
+                    breakeven hold SHRINKS when the coming window is
+                    dirtier than the daily mean (standing warmth is
+                    carbon-expensive now; retire sooner, reload in a
+                    cleaner hour) and STRETCHES through clean windows;
+                    scale-out placement prices its load burst at the
+                    current intensity, so prewarm-style capacity buys
+                    drift into low-intensity windows.  Flat traces
+                    reproduce the energy decisions exactly.
     """
 
     def __init__(self, *, tick_s: float = 60.0, max_replicas: int = 3,
                  pressure_hi: float = 0.5, pressure_lo: float = 0.25,
                  margin: float = 1.0, cooldown_s: float = 300.0,
-                 patience_s: float = 1800.0):
+                 patience_s: float = 1800.0, carbon_aware: bool = False):
         if tick_s <= 0:
             raise ValueError("tick period must be positive")
         if max_replicas < 1:
@@ -103,6 +120,8 @@ class ReplicaAutoscaler:
         self.margin = margin
         self.cooldown_s = cooldown_s
         self.patience_s = patience_s
+        self.carbon_aware = carbon_aware
+        self.carbon_trace: Optional[CarbonTrace] = None
         self._last_action: Dict[str, float] = {}
         self.scale_outs = 0
         self.scale_ins = 0
@@ -113,6 +132,18 @@ class ReplicaAutoscaler:
         self._last_action.clear()
         self.scale_outs = 0
         self.scale_ins = 0
+
+    def set_carbon_trace(self, trace: CarbonTrace) -> None:
+        """Bind the run's intensity trace (called by ``run_fleet``);
+        only consulted when ``carbon_aware`` is set."""
+        self.carbon_trace = trace
+
+    def _trace(self) -> Optional[CarbonTrace]:
+        """The active trace, or None when carbon pricing is off (not
+        carbon_aware, no trace bound, or a flat trace -- all three are
+        energy-identical, so one code path serves them)."""
+        t = self.carbon_trace if self.carbon_aware else None
+        return None if (t is None or t.is_flat) else t
 
     # -- per-route signals --------------------------------------------------
     @staticmethod
@@ -141,7 +172,7 @@ class ReplicaAutoscaler:
         return max(est.expected_gap_s(), elapsed)
 
     def _breakeven_hold_s(self, cluster: Cluster, device_id: str,
-                          model_id: str) -> float:
+                          model_id: str, now_s: float = 0.0) -> float:
         """Replica-level T*: how long this replica may park before its
         marginal tax buys a reload.  Infinite at zero marginal watts.
 
@@ -149,7 +180,21 @@ class ReplicaAutoscaler:
         the default Breakeven eviction policy: the derived per-arch
         loaders spend most of their window near bare idle, so the
         energy-exact convention would price reloads at almost nothing
-        and never let a replica stand."""
+        and never let a replica stand.
+
+        Carbon mode reprices the same ski rental in kgCO2e with a
+        first-order intensity correction: parking over the coming
+        window is weighed at the window's mean intensity, the eventual
+        reload at the daily mean (its phase is unknown), so
+
+            hold_c = hold * i_daily / i(now .. now+hold)
+
+        -- shorter through dirty hours, longer through clean ones.
+
+        Args:
+          now_s: current sim time (anchors the carbon window; unused
+                 in energy mode).
+        Returns: hold in seconds (may be ``inf``)."""
         dev = cluster.devices[device_id]
         others_on = any(
             (m.resident or m.loading) and m.model_id != model_id
@@ -157,7 +202,13 @@ class ReplicaAutoscaler:
         park_w = marginal_park_w(dev, others_on)
         if park_w <= 0.0:
             return math.inf
-        return cluster.loader_for(model_id, device_id).load_energy_j / park_w
+        hold = cluster.loader_for(model_id, device_id).load_energy_j / park_w
+        trace = self._trace()
+        if trace is not None:
+            window = trace.mean(now_s, now_s + hold)
+            if window > 0.0:
+                hold *= trace.daily_mean_kg_per_kwh / window
+        return hold
 
     # -- planning -----------------------------------------------------------
     def plan(self, cluster: Cluster, now_s: float) -> List[Action]:
@@ -249,14 +300,29 @@ class ReplicaAutoscaler:
                  if d not in members
                  and self._fits_reserving(cluster, d, mid, reserved)]
         best, best_key = None, None
+        trace = self._trace()
         for d in cands:
             dev = cluster.devices[d]
             ld = cluster.loader_for(mid, d)
-            hold = self._breakeven_hold_s(cluster, d, mid)
+            hold = self._breakeven_hold_s(cluster, d, mid, now_s)
             if not forced and gap * (n + 1) > self.margin * hold:
                 continue
-            cost = scaleout_cost_j(dev, ld, min(gap * (n + 1), hold),
-                                   context_on=cluster.context_on(d))
+            window = min(gap * (n + 1), hold)
+            ctx_on = cluster.context_on(d)
+            if trace is None:
+                cost = scaleout_cost_j(dev, ld, window, context_on=ctx_on)
+            else:
+                # kgCO2e analogue of scaleout_cost_j: the load burst at
+                # the CURRENT intensity (this is what drags prewarm-style
+                # capacity buys into clean windows), the marginal parking
+                # over the expected demand window
+                t_warm = now_s + ld.t_load_s
+                load_kg = above_base_load_j(dev, ld) \
+                    * trace.mean(now_s, t_warm) / _J_PER_KWH
+                park_kg = marginal_park_w(dev, ctx_on) \
+                    * trace.integral(t_warm, t_warm + max(window, 0.0)) \
+                    / _J_PER_KWH
+                cost = load_kg + park_kg
             key = (cost, cluster.load_backlog_s(d, now_s), d)
             if best_key is None or key < best_key:
                 best, best_key = d, key
@@ -279,7 +345,8 @@ class ReplicaAutoscaler:
             if demand > self.pressure_lo * shrunk_cap:
                 return None       # remaining set would run hot
             idle = self._replica_idle_s(cluster, d, mid, now_s)
-            bar = max(self.margin * self._breakeven_hold_s(cluster, d, mid),
+            bar = max(self.margin * self._breakeven_hold_s(cluster, d, mid,
+                                                           now_s),
                       self.patience_s)
             if idle >= bar:
                 return ScaleIn(mid, d)

@@ -20,6 +20,7 @@ import dataclasses
 import re
 from typing import Dict, List, Sequence, Union
 
+from repro.core.impact import US_GRID_KG_CO2_PER_KWH
 from repro.core.power_model import DeviceProfile, get_profile
 
 
@@ -31,24 +32,36 @@ from repro.core.power_model import DeviceProfile, get_profile
 class ElectricityMix:
     """Grid characteristics of one operating zone.
 
-    gwp_kg_per_kwh: Global Warming Potential of the mix (kgCO2eq/kWh).
+    gwp_kg_per_kwh: Global Warming Potential of the mix (kgCO2eq/kWh)
+                    -- the DAILY MEAN; the time-varying intensity curve
+                    is ``trace_shape`` scaled to this mean
+                    (fleet/carbon.py ``trace_for_zone``).
     usd_per_kwh:    industrial electricity price.
+    trace_shape:    preset diurnal shape name in ``carbon.TRACE_SHAPES``
+                    ("flat" / "solar-duck" / "wind-night").
     """
     zone: str
     gwp_kg_per_kwh: float
     usd_per_kwh: float
+    trace_shape: str = "flat"
 
 
+# The USA intensity is DERIVED from core.impact (single source of truth
+# for the paper's 180 kT figure); core cannot import fleet, so the
+# dependency points this way.
 MIXES: Dict[str, ElectricityMix] = {
     "WOR": ElectricityMix("WOR", 0.481, 0.14),   # world average
-    "USA": ElectricityMix("USA", 0.390, 0.12),   # matches core.impact
-    "DEU": ElectricityMix("DEU", 0.350, 0.26),
-    "FRA": ElectricityMix("FRA", 0.056, 0.18),
-    "SWE": ElectricityMix("SWE", 0.020, 0.10),
+    "USA": ElectricityMix("USA", US_GRID_KG_CO2_PER_KWH, 0.12,
+                          trace_shape="solar-duck"),
+    "DEU": ElectricityMix("DEU", 0.350, 0.26, trace_shape="solar-duck"),
+    "FRA": ElectricityMix("FRA", 0.056, 0.18),   # nuclear: near-flat
+    "SWE": ElectricityMix("SWE", 0.020, 0.10, trace_shape="wind-night"),
 }
 
 
 def get_mix(zone: str) -> ElectricityMix:
+    """Look up a zone's electricity mix (case-insensitive; KeyError
+    lists the known zones)."""
     key = zone.upper()
     if key not in MIXES:
         raise KeyError(f"unknown electricity mix {zone!r}; have {sorted(MIXES)}")
@@ -56,10 +69,15 @@ def get_mix(zone: str) -> ElectricityMix:
 
 
 def energy_cost_usd(energy_wh: float, mix: ElectricityMix) -> float:
+    """Dollar cost of ``energy_wh`` at the zone's industrial price."""
     return energy_wh / 1e3 * mix.usd_per_kwh
 
 
 def carbon_kg(energy_wh: float, mix: ElectricityMix) -> float:
+    """SCALAR kgCO2e of ``energy_wh`` at the zone's mean intensity --
+    the fixed-intensity bookkeeping the paper uses.  Time-varying
+    pricing lives in fleet/carbon.py (equal to this under a flat
+    trace, pinned to 1e-9 kg)."""
     return energy_wh / 1e3 * mix.gwp_kg_per_kwh
 
 
@@ -111,6 +129,8 @@ CATALOG: Dict[str, GPUSku] = {
 
 
 def get_sku(key: str) -> GPUSku:
+    """Look up a SKU by key (case/dash-insensitive; KeyError lists the
+    catalog)."""
     k = key.lower().replace("-", "_")
     if k not in CATALOG:
         raise KeyError(f"unknown SKU {key!r}; have {sorted(CATALOG)}")

@@ -37,9 +37,11 @@ from repro.serving.model_manager import ManagedModel, ModelManager
 
 
 def _make_policy(factory: Callable[..., Policy], loader: LoaderSpec,
-                 profile) -> Policy:
-    """Instantiate a per-replica policy, feeding the replica's loader and
-    device profile to factories that want them."""
+                 profile, carbon_trace=None) -> Policy:
+    """Instantiate a per-replica policy, feeding the replica's loader,
+    device profile, and the run's carbon-intensity trace to factories
+    whose signatures want them (Breakeven takes loader/profile;
+    carbon.CarbonBreakeven additionally takes carbon_trace)."""
     try:
         params = inspect.signature(factory).parameters
     except (TypeError, ValueError):
@@ -49,6 +51,8 @@ def _make_policy(factory: Callable[..., Policy], loader: LoaderSpec,
         kwargs["loader"] = loader
     if "profile" in params:
         kwargs["profile"] = profile
+    if "carbon_trace" in params:
+        kwargs["carbon_trace"] = carbon_trace
     return factory(**kwargs)
 
 
@@ -128,6 +132,11 @@ class Cluster:
         # model.  Empty/None when the cluster is driven directly.
         self.runtime: Dict[str, object] = {}
         self.service_model = None
+        # the run's grid-intensity trace (fleet/carbon.py), bound by
+        # run_fleet BEFORE any replica exists so carbon-aware policies
+        # (CarbonBreakeven) receive it at construction; None when the
+        # cluster is driven directly (policies fall back to energy T*)
+        self.carbon_trace = None
 
     # -- registry -----------------------------------------------------------
     def register_model(self, spec: FleetModelSpec) -> None:
@@ -168,7 +177,8 @@ class Cluster:
             spec = self.specs[model_id]
             loader = self.loader_for(model_id, device_id)
             policy = _make_policy(spec.policy_factory, loader,
-                                  self.devices[device_id].profile)
+                                  self.devices[device_id].profile,
+                                  self.carbon_trace)
             mm.register(model_id, policy=policy, loader=loader,
                         vram_gb=spec.vram_gb)
         return mm.models[model_id]
@@ -422,7 +432,8 @@ class Cluster:
         spec = self.specs[model_id]
         policy = _make_policy(spec.policy_factory,
                               self.loader_for(model_id, device_id),
-                              self.devices[device_id].profile)
+                              self.devices[device_id].profile,
+                              self.carbon_trace)
         return policy.idle_timeout_s(now_s)
 
     def make_room(self, device_id: str, model_id: str) -> None:

@@ -36,6 +36,15 @@ requests for a model that is mid-load are served the instant the load
 completes, which is exactly the single-device simulator's batching
 rule.
 
+Carbon accounting integrates by TRACE, not scalar: every device meter
+records its power timeline, and ``FleetResult.carbon_kg`` is the
+integral of that power against the scenario's grid-intensity trace
+(fleet/carbon.py).  With the default flat trace this reproduces the old
+``energy_kwh * gwp`` scalar to 1e-9 kg (tested); with a diurnal trace
+the SAME joules cost different kgCO2e depending on WHEN they are drawn,
+which is what the carbon-aware router/consolidator/autoscaler modes
+optimize against.
+
 The clairvoyant lower bound reported alongside is the cluster analogue
 of ``scheduler.Clairvoyant``: per model, offline per-gap ski rental
 using the fleet's BEST constants (min DVFS step across devices, min
@@ -57,6 +66,8 @@ import numpy as np
 
 from repro.core.coldstart import loader_from_checkpoint
 from repro.fleet.autoscaler import ReplicaAutoscaler, ScaleOut
+from repro.fleet.carbon import (CarbonTrace, carbon_timeline_kg, flat_trace,
+                                make_trace, trace_for_zone)
 from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
@@ -95,9 +106,29 @@ class FleetScenario:
     # service-energy-held-constant convention)
     max_batch: int = 4
     service_model: Optional[ServiceTimeModel] = None
+    # time-varying grid intensity (fleet/carbon.py):
+    #   None          -> flat at the zone's mean (EXACTLY the scalar
+    #                    kgCO2e accounting; the equivalence anchor)
+    #   "zone"        -> the zone's preset diurnal shape
+    #   a shape name  -> that shape at the zone's mean ("solar-duck", ..)
+    #   a CarbonTrace -> used as-is
+    carbon_trace: Union[CarbonTrace, str, None] = None
 
     def resolved_service_model(self) -> ServiceTimeModel:
         return self.service_model or ConstantServiceTime(self.service_s)
+
+    def resolved_carbon_trace(self) -> CarbonTrace:
+        """The intensity curve this run integrates emissions against
+        (see ``carbon_trace``); flat-at-mean when unset."""
+        ct = self.carbon_trace
+        if isinstance(ct, CarbonTrace):
+            return ct
+        mean = get_mix(self.zone).gwp_kg_per_kwh
+        if ct is None:
+            return flat_trace(mean)
+        if ct == "zone":
+            return trace_for_zone(self.zone)
+        return make_trace(ct, mean)
 
 
 @dataclasses.dataclass
@@ -110,6 +141,7 @@ class DeviceReport:
     requests: int
     resident: List[str]                  # models resident at horizon end
     meter_state: str                     # meter state at horizon end
+    carbon_kg: float = 0.0               # trace-integrated device emissions
 
     @property
     def total_wh(self) -> float:
@@ -140,6 +172,18 @@ class FleetResult:
         dataclasses.field(default_factory=dict)
     scale_outs: int = 0
     scale_ins: int = 0
+    # carbon accounting (fleet/carbon.py): `carbon_kg` above is the
+    # TRACE-INTEGRAL of the metered power over the run's intensity
+    # curve; `carbon_kg_flat` is the legacy scalar (energy x zone mean),
+    # equal to carbon_kg under a flat trace (pinned to 1e-9 kg)
+    carbon_kg_flat: float = 0.0
+    carbon_trace_name: str = "flat"
+    # cumulative kgCO2e at (hourly) bin boundaries: [(t_s, kg_so_far)]
+    carbon_timeline: Sequence[Tuple[float, float]] = ()
+    # fleet-wide metered power segments (t0_s, t1_s, watts) -- carbon is
+    # a POST-HOC integral over these, so one run can be re-priced under
+    # any trace/zone without re-simulating (see carbon_with)
+    power_timeline: Sequence[Tuple[float, float, float]] = ()
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or
@@ -176,14 +220,38 @@ class FleetResult:
             return 0.0
         return 1.0 - self.energy_wh / baseline.energy_wh
 
+    def carbon_savings_vs(self, baseline: "FleetResult") -> float:
+        """Fractional kgCO2e saving vs a baseline run (same guard as
+        ``savings_vs``) -- the per-policy carbon delta the bench rows
+        report."""
+        if baseline.carbon_kg <= 0.0:
+            return 0.0
+        return 1.0 - self.carbon_kg / baseline.carbon_kg
+
+    def carbon_with(self, trace: CarbonTrace) -> float:
+        """Re-price this run's emissions under a different intensity
+        trace WITHOUT re-simulating: carbon is an integral over the
+        recorded ``power_timeline``, which does not depend on the trace
+        (the dynamics only change when a carbon-aware component was
+        steering -- this prices the same schedule on another grid)."""
+        return trace.carbon_for_segments(self.power_timeline)
+
 
 def run_fleet(scenario: FleetScenario) -> FleetResult:
     sc = scenario
     router = get_router(sc.router) if isinstance(sc.router, str) else sc.router
     svc = sc.resolved_service_model()
+    trace = sc.resolved_carbon_trace()
+    # carbon-aware components see the run's intensity curve; everything
+    # else ignores it (a flat trace makes the aware components behave
+    # exactly like their energy-only counterparts)
+    for comp in (router, sc.consolidator, sc.autoscaler):
+        if comp is not None and hasattr(comp, "set_carbon_trace"):
+            comp.set_carbon_trace(trace)
     if sc.autoscaler is not None:
         sc.autoscaler.reset()
     cluster = Cluster(sc.devices)
+    cluster.carbon_trace = trace      # before any replica/policy exists
     for fm in sc.models:
         cluster.register_model(fm.spec)
     for fm in sc.models:                      # warm starts (Table-6 style)
@@ -387,11 +455,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     cluster.advance_to(max(sc.horizon_s, cluster.clock()))
     cluster.snapshot_replicas(cluster.clock())
 
-    totals = cluster.device_totals()
+    totals = cluster.device_totals()          # flushes every meter to now
     reports = []
     cold = reqs = 0
     latency = 0.0
     samples: List[float] = []
+    fleet_segments: List[Tuple[float, float, float]] = []
     for did in sorted(cluster.devices):
         mm = cluster.managers[did]
         d_cold = sum(m.cold_starts for m in mm.models.values())
@@ -401,12 +470,14 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             samples.extend(m.latency_samples)
         cold += d_cold
         reqs += d_reqs
+        fleet_segments.extend(mm.meter.timeline)
         reports.append(DeviceReport(
             instance_id=did, sku=cluster.devices[did].sku.key,
             energy_wh=totals[did],
             parking_tax_wh=mm.meter.parking_tax_wh(),
             cold_starts=d_cold, requests=d_reqs,
-            resident=mm.resident_ids(), meter_state=mm.meter.state))
+            resident=mm.resident_ids(), meter_state=mm.meter.state,
+            carbon_kg=trace.carbon_for_segments(mm.meter.timeline)))
 
     lb_shared, cv_sum = clairvoyant_bound(sc)
     energy = sum(r.total_wh for r in reports)
@@ -420,7 +491,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         lb_shared_wh=lb_shared, cv_per_model_wh=cv_sum,
         infra_usd=fleet_price_usd(sc.devices, sc.horizon_s, sc.price_tier),
         energy_usd=energy_cost_usd(energy, mix),
-        carbon_kg=carbon_kg(energy, mix),
+        carbon_kg=math.fsum(r.carbon_kg for r in reports),
+        carbon_kg_flat=carbon_kg(energy, mix),
+        carbon_trace_name=trace.name,
+        carbon_timeline=carbon_timeline_kg(trace, fleet_segments,
+                                           end_s=sc.horizon_s),
+        power_timeline=fleet_segments,
         latencies_s=np.sort(np.asarray(samples, dtype=float)),
         replica_timeline={mid: list(log)
                           for mid, log in cluster.replica_log.items()},
@@ -482,14 +558,16 @@ def clairvoyant_bound(sc: FleetScenario) -> Tuple[float, float]:
 # Convenience constructors.
 # ---------------------------------------------------------------------------
 
-def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
+def mixed_fleet_scenario(policy_factory, router, *,
+                         consolidate: Union[bool, Consolidator] = False,
                          n_models: int = 10,
                          fleet: str = "2xh100+2xa100+2xl40s",
                          horizon_s: float = DAY, seed: int = 100,
                          service_s: float = 0.0,
                          service_model: Optional[ServiceTimeModel] = None,
                          max_batch: int = 4,
-                         autoscaler: Optional[ReplicaAutoscaler] = None
+                         autoscaler: Optional[ReplicaAutoscaler] = None,
+                         carbon_trace: Union[CarbonTrace, str, None] = None
                          ) -> FleetScenario:
     """The ISSUE's reference scenario (shared by bench_fleet and the
     fleet_parking example): N models under a diurnal + bursty +
@@ -497,7 +575,11 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
 
     Checkpoints span ~5..5+3.5(N-1) GB so placement interacts with
     capacity; every model starts prewarmed round-robin (the always-on
-    operating point the paper says industry defaults to)."""
+    operating point the paper says industry defaults to).
+
+    ``consolidate`` accepts a configured ``Consolidator`` (e.g. the
+    carbon-aware one) or a bool for the default; ``carbon_trace``
+    passes through to ``FleetScenario.carbon_trace``."""
     from repro.core import traffic
     patterns = ["diurnal", "bursty", "mmpp", "steady"]
     devices = build_fleet(fleet)
@@ -512,11 +594,15 @@ def mixed_fleet_scenario(policy_factory, router, *, consolidate: bool = False,
             checkpoint_bytes=int(ckpt_gb * gb), vram_gb=ckpt_gb * 1.1,
             home=devices[i % len(devices)].instance_id)
         models.append(FleetModel(spec, arr))
+    if isinstance(consolidate, Consolidator):
+        cons: Optional[Consolidator] = consolidate
+    else:
+        cons = Consolidator() if consolidate else None
     return FleetScenario(devices=devices, models=models, router=router,
                          horizon_s=horizon_s, service_s=service_s,
                          service_model=service_model, max_batch=max_batch,
-                         consolidator=Consolidator() if consolidate else None,
-                         autoscaler=autoscaler)
+                         consolidator=cons, autoscaler=autoscaler,
+                         carbon_trace=carbon_trace)
 
 
 def single_device_scenario(arrivals_s: Sequence[float], policy_factory,

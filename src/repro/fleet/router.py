@@ -26,12 +26,26 @@ opens:
                        loader backlog, routes energy-greedy inside the
                        budget, latency-greedy when nothing fits.
 
+  * carbon-aware    -- slo-aware's latency machinery with the cold-
+                       placement score priced in kgCO2e against the
+                       run's grid-intensity trace (fleet/carbon.py):
+                       the immediate load burst and near-term parking
+                       are priced at the CURRENT intensity window, the
+                       eventual reload at the daily mean -- so high-
+                       intensity hours push placements onto devices
+                       that park at zero marginal watts, and cold
+                       starts drift toward low-intensity windows.
+
 Consolidation is the placement half: periodically migrate parked models
 off lightly-packed devices onto already-on devices with room, so the
 drained device falls back to ``p_base_w``.  The benefit side of the
 cost test is exact, not estimated: without the migration the source
 keeps its context until its LAST armed idle timeout fires, so draining
-it now saves ``dvfs_step_w * (max evict_at - now)``.
+it now saves ``dvfs_step_w * (max evict_at - now)``.  In carbon-aware
+mode the same windows are integrated against the intensity trace, so a
+migration whose load burst lands in a trough but whose saving spans the
+evening peak clears the margin earlier -- deferrable packing work
+shifts into low-intensity windows without changing the safety rules.
 """
 from __future__ import annotations
 
@@ -40,6 +54,7 @@ import math
 from typing import List, Optional, Tuple
 
 from repro.core.breakeven import breakeven_seconds
+from repro.fleet.carbon import CarbonTrace, _J_PER_KWH
 from repro.fleet.catalog import above_base_load_j, marginal_park_w
 from repro.fleet.cluster import Cluster
 
@@ -59,6 +74,13 @@ class Router:
     name = "base"
 
     def choose(self, model_id: str, t_s: float, cluster: Cluster) -> str:
+        """Pick the device that serves this request.
+
+        Args:
+          model_id: the requested model (registered on the cluster).
+          t_s:      arrival time (sim seconds).
+          cluster:  live fleet state (residency, occupancy, rates).
+        Returns: the chosen device's ``instance_id``."""
         raise NotImplementedError
 
     # -- shared helpers -----------------------------------------------------
@@ -121,6 +143,10 @@ class Router:
 
 
 class WarmFirstRouter(Router):
+    """Never cold-start when a warm replica exists (the parking tax is
+    already paid there -- Eq. 1's context term); placement for cold
+    models falls back to least-loaded."""
+
     name = "warm-first"
 
     def choose(self, model_id, t_s, cluster) -> str:
@@ -131,6 +157,9 @@ class WarmFirstRouter(Router):
 
 
 class LeastLoadedRouter(Router):
+    """Classic load balancing, blind to warmth: the baseline that
+    sprays cold starts and shows why energy-aware routing matters."""
+
     name = "least-loaded"
 
     def choose(self, model_id, t_s, cluster) -> str:
@@ -188,6 +217,12 @@ class SLOAwareRouter(Router):
     # -- latency estimate ---------------------------------------------------
     def estimated_wait_s(self, model_id: str, device_id: str, t_s: float,
                          cluster: Cluster) -> float:
+        """Added latency one request would see on ``device_id`` NOW:
+        queue rounds for a warm replica, load residual for a loading
+        one, loader-channel backlog + own load when cold.
+
+        Args: as ``Router.choose`` plus the candidate ``device_id``.
+        Returns: estimated seconds of queue wait + cold-start time."""
         m = cluster.managers[device_id].models.get(model_id)
         svc = cluster.service_model
         svc_s = 0.0
@@ -215,6 +250,12 @@ class SLOAwareRouter(Router):
                                          exclude_model=model_id)
         return backlog + cluster.loader_for(model_id, device_id).t_load_s
 
+    def _cold_score(self, model_id: str, t_s: float, cluster: Cluster):
+        """Scoring key used for cold placement among budget-feasible
+        candidates; subclasses swap the objective (joules here, kgCO2e
+        in ``CarbonAwareRouter``) without touching the SLO machinery."""
+        return self._joule_score(model_id, cluster, steady_state=True)
+
     def choose(self, model_id, t_s, cluster) -> str:
         warm = set(cluster.locations(model_id, include_loading=True))
         # pending scale-outs are FUTURE capacity: their load is already
@@ -230,7 +271,7 @@ class SLOAwareRouter(Router):
         ok = [d for d in cands if est[d] <= budget]
         if not ok:                    # infeasible: minimize latency instead
             return min(cands, key=lambda d: (est[d], d))
-        score = self._joule_score(model_id, cluster, steady_state=True)
+        score = self._cold_score(model_id, t_s, cluster)
 
         def key(d: str):
             joules = 0.0 if d in warm or d in pending else score(d)[0]
@@ -239,12 +280,81 @@ class SLOAwareRouter(Router):
         return min(ok, key=key)
 
 
+class CarbonAwareRouter(SLOAwareRouter):
+    """SLO-aware routing with the cold-placement objective in kgCO2e.
+
+    Keeps slo-aware's entire latency estimate/budget machinery (warm
+    replicas and pending scale-outs still route free) but prices the
+    cold-placement ski rental against the run's grid-intensity trace:
+
+      score(d) = load_now + min(park_through, park_T* + reload_later)
+
+    where ``load_now`` is the above-bare load burst integrated over
+    [t, t+t_load] at the CURRENT intensity, ``park_through`` holds the
+    marginal DVFS step until the expected next arrival (trace-priced),
+    and ``reload_later`` prices the eventual reload at the daily-mean
+    intensity (its phase is unknown).  With a flat trace every window
+    weighs the same and the score reduces to slo-aware's joule score
+    (delegated exactly, so flat-trace runs are trace-identical).
+
+    Args:
+      budget_s:  p99 added-latency budget (as ``SLOAwareRouter``).
+      headroom:  route against ``budget_s * headroom``.
+      trace:     ``CarbonTrace`` to price against; ``run_fleet`` binds
+                 the scenario's resolved trace automatically.
+    """
+
+    name = "carbon-aware"
+
+    def __init__(self, budget_s: float = 60.0, *, headroom: float = 1.0,
+                 trace: Optional[CarbonTrace] = None):
+        super().__init__(budget_s, headroom=headroom)
+        self.carbon_trace = trace
+
+    def set_carbon_trace(self, trace: CarbonTrace) -> None:
+        """Bind the run's intensity trace (called by ``run_fleet``)."""
+        self.carbon_trace = trace
+
+    def _cold_score(self, model_id, t_s, cluster):
+        trace = self.carbon_trace
+        if trace is None or trace.is_flat:
+            return super()._cold_score(model_id, t_s, cluster)
+        gap = cluster.rates[model_id].expected_gap_s()
+
+        def score(did: str) -> Tuple[float, str]:
+            prof = cluster.devices[did].profile
+            ld = cluster.loader_for(model_id, did)
+            load_j = _above_base_load_j(cluster, model_id, did)
+            step_w = marginal_park_w(cluster.devices[did],
+                                     cluster.context_on(did))
+            t_star = breakeven_seconds(ld, prof, paper_convention=False)
+            t_load = ld.t_load_s
+            t_warm = t_s + t_load             # the replica lands here
+            load_now = (load_j / t_load) \
+                * trace.integral(t_s, t_warm) / _J_PER_KWH \
+                if t_load > 0 else 0.0
+            park_through = step_w \
+                * trace.integral(t_warm, t_warm + gap) / _J_PER_KWH
+            park_then_reload = (
+                step_w * trace.integral(t_warm, t_warm + min(gap, t_star))
+                / _J_PER_KWH
+                + load_j * trace.daily_mean_kg_per_kwh / _J_PER_KWH)
+            return (load_now + min(park_through, park_then_reload), did)
+
+        return score
+
+
 ROUTERS = {r.name: r for r in
            (WarmFirstRouter(), LeastLoadedRouter(), EnergyGreedyRouter(),
-            BreakevenRouter(), SLOAwareRouter())}
+            BreakevenRouter(), SLOAwareRouter(), CarbonAwareRouter())}
 
 
 def get_router(name: str) -> Router:
+    """Look up a shared router instance by ``name`` (KeyError with the
+    available names otherwise).  Instances are stateless across requests
+    -- all adaptivity lives in the cluster's rate estimators -- so
+    sharing them between runs is safe; ``run_fleet`` re-binds the carbon
+    trace per run."""
     if name not in ROUTERS:
         raise KeyError(f"unknown router {name!r}; have {sorted(ROUTERS)}")
     return ROUTERS[name]
@@ -274,22 +384,55 @@ class Consolidator:
     All windows are capped at ``lookahead_s`` so always-on (infinite)
     timeouts compare finitely.  Draining is all-or-nothing per source
     device -- a partial move saves nothing, the source's context stays
-    up for the models left behind."""
+    up for the models left behind.
+
+    Carbon-aware mode (``carbon_aware=True``): identical plan structure
+    and safety rules, but every power-x-window product in the benefit /
+    cost comparison is integrated against the run's grid-intensity
+    trace (kgCO2e instead of joules).  A migration burst in a trough
+    that drains a context through the evening peak clears the margin
+    earlier; the same migration proposed AT the peak is priced up and
+    deferred -- consolidation work shifts into low-intensity windows.
+    With a flat trace both sides scale by the same constant, so the
+    decisions are exactly the energy decisions.
+
+    Args:
+      period_s:     planning cadence (sim seconds).
+      margin:       require benefit >= margin * cost.
+      lookahead_s:  cap on every counted window.
+      carbon_aware: price benefit/cost in kgCO2e over the bound trace
+                    (``run_fleet`` binds ``set_carbon_trace``).
+    """
 
     def __init__(self, *, period_s: float = 900.0, margin: float = 1.0,
-                 lookahead_s: float = 2 * 3600.0):
+                 lookahead_s: float = 2 * 3600.0,
+                 carbon_aware: bool = False):
         if period_s <= 0:
             raise ValueError("period must be positive")
         self.period_s = period_s
         self.margin = margin     # require benefit >= margin * cost
         self.lookahead_s = lookahead_s
+        self.carbon_aware = carbon_aware
+        self.carbon_trace: Optional[CarbonTrace] = None
+
+    def set_carbon_trace(self, trace: CarbonTrace) -> None:
+        """Bind the run's intensity trace (called by ``run_fleet``);
+        only consulted when ``carbon_aware`` is set."""
+        self.carbon_trace = trace
 
     def plan(self, cluster: Cluster, now_s: float,
              busy: Optional[dict] = None) -> List[Move]:
         """Propose migrations; never increases instantaneous fleet idle
         power (targets are already context-on, sources fully drain).
-        ``busy`` maps device_id -> busy flag; busy devices are skipped
-        on both sides."""
+
+        Args:
+          cluster: live fleet state.
+          now_s:   planning instant (sim seconds).
+          busy:    device_id -> busy flag; busy devices are skipped on
+                   both sides (never migrate under in-flight work).
+        Returns: list of ``Move`` actions the event loop applies through
+          the destination loader channels (racing requests re-checked
+          there)."""
         busy = busy or {}
         free_slots = {did: cluster.free_slots(did)
                       for did in cluster.devices}
@@ -306,6 +449,19 @@ class Consolidator:
 
         def cap(t: float) -> float:
             return min(t, horizon)
+
+        trace = self.carbon_trace if self.carbon_aware else None
+
+        def weigh(power_w: float, t0: float, t1: float) -> float:
+            """One benefit/cost term: power held over [t0, t1], in
+            joules -- or kgCO2e (trace-integrated) in carbon mode.
+            Both sides of the margin test use the same units, so the
+            comparison is homogeneous either way."""
+            if t1 <= t0:
+                return 0.0
+            if trace is None:
+                return power_w * (t1 - t0)
+            return trace.carbon_kg(power_w, t0, t1)
 
         # per-target context window: how long its OWN residents keep the
         # step up regardless of what we pack onto it
@@ -351,22 +507,27 @@ class Consolidator:
                     if slots[dst] >= 1 and vram[dst] >= m.vram_gb:
                         assignment.append(Move(m.model_id, src, dst))
                         ld = cluster.loader_for(m.model_id, dst)
-                        cost_j += _above_base_load_j(cluster, m.model_id,
-                                                     dst)
+                        t_start = dst_free[dst]
+                        t_done = t_start + ld.t_load_s
+                        # above-bare load burst over its real window
+                        # (joules: exactly above_base_load_j; carbon:
+                        # the same watts against the trace)
+                        p_above = max(
+                            ld.p_load_w
+                            - cluster.devices[dst].profile.p_base_w, 0.0)
+                        cost_j += weigh(p_above, t_start, t_done)
                         # destination-side extension: the migrated
                         # replica re-arms on dst and may hold dst's step
                         # up past its own residents' window
-                        t_start = dst_free[dst]
-                        t_done = t_start + ld.t_load_s
                         dst_free[dst] = t_done
                         last_start = max(last_start, t_start)
                         timeout = cluster.preview_timeout_s(
                             m.model_id, dst, t_done)
                         armed_end = t_done + timeout
                         step_dst = cluster.devices[dst].profile.dvfs_step_w
-                        cost_j += step_dst * max(
-                            0.0, cap(armed_end) - cap(max(trial_win[dst],
-                                                          now_s)))
+                        cost_j += weigh(step_dst,
+                                        cap(max(trial_win[dst], now_s)),
+                                        cap(armed_end))
                         trial_win[dst] = max(trial_win[dst], armed_end)
                         slots[dst] -= 1
                         vram[dst] -= m.vram_gb
@@ -378,8 +539,8 @@ class Consolidator:
             if not ok or not assignment:
                 continue
             # realized benefit starts when the LAST resident leaves src
-            benefit_j = (cluster.devices[src].profile.dvfs_step_w
-                         * max(0.0, cap(last_evict) - cap(last_start)))
+            benefit_j = weigh(cluster.devices[src].profile.dvfs_step_w,
+                              cap(last_start), cap(last_evict))
             if benefit_j >= self.margin * cost_j:
                 moves.extend(assignment)
                 drained.add(src)

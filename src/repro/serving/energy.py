@@ -13,7 +13,7 @@ production would pass time.monotonic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.power_model import DeviceProfile
 
@@ -42,6 +42,13 @@ class EnergyMeter:
         self._energy_j: Dict[str, float] = {}
         self._durations_s: Dict[str, float] = {}
         self._power_override: Optional[float] = None
+        # metered power timeline: (t0_s, t1_s, watts) per closed interval
+        # (constant power within each).  This is what lets carbon be an
+        # INTEGRAL over a time-varying grid-intensity trace instead of
+        # energy x scalar (fleet/carbon.py) -- same instants, same watts
+        # as the energy sums above, so flat-trace carbon is exactly the
+        # scalar bookkeeping.
+        self.timeline: List[Tuple[float, float, float]] = []
 
     def _power_w(self, state: str) -> float:
         # an explicit override wins in ANY state: concurrent phases
@@ -68,6 +75,18 @@ class EnergyMeter:
             + dt * p
         self._durations_s[self._state] = \
             self._durations_s.get(self._state, 0.0) + dt
+        if dt > 0.0:
+            # coalesce contiguous equal-power intervals (sync_power often
+            # re-settles into the same state): lossless for integration
+            # and bounds growth to one entry per actual power CHANGE.
+            # NOTE: in a long-lived production meter (time.monotonic
+            # clock) this list still grows with every power change --
+            # flush it after pricing (timeline.clear()) in that setting.
+            if self.timeline and self.timeline[-1][1] == self._since \
+                    and self.timeline[-1][2] == p:
+                self.timeline[-1] = (self.timeline[-1][0], now, p)
+            else:
+                self.timeline.append((self._since, now, p))
         self._state = state
         self._since = now
         self._power_override = power_override_w

@@ -1,0 +1,264 @@
+"""Carbon-intensity-aware scheduling: trace math, fleet integration,
+equivalence anchors, and the pinned 10x6-day acceptance (ISSUE 4).
+
+Three layers:
+  * CarbonTrace unit tests -- interpolation/wrap, EXACT integration
+    against hand-computed trapezoids, generator means.
+  * fleetsim integration -- flat-trace carbon reproduces the scalar
+    accounting to 1e-9 kg, a two-segment trace matches a hand-computed
+    integral, device carbon sums to fleet carbon, and re-pricing a
+    recorded schedule under another trace equals simulating under it.
+  * acceptance -- on the pinned 10x6 day (seed 100) under a solar-duck
+    trace, the carbon-aware stack cuts kgCO2e vs energy-greedy at
+    equal-or-better p99; the single-device energy anchor survives with
+    a diurnal trace bound.
+"""
+import math
+
+import pytest
+
+from repro.core import H100, PYTORCH_70B, QWEN25_7B_MEASURED, traffic
+from repro.core.impact import BASE, US_GRID_KG_CO2_PER_KWH
+from repro.core.scheduler import AlwaysOn, Breakeven, FixedTTL
+from repro.core.simulator import simulate
+from repro.fleet import (CarbonAwareRouter, CarbonBreakeven, CarbonTrace,
+                         Consolidator, FleetModel, FleetModelSpec,
+                         FleetScenario, MIXES, build_fleet,
+                         carbon_timeline_kg, flat_trace, get_mix, make_trace,
+                         mixed_fleet_scenario, run_fleet,
+                         single_device_scenario, solar_duck, trace_for_zone,
+                         wind_night)
+from repro.serving import RooflineServiceTime
+
+DAY = 24 * 3600.0
+HALF = 43200.0
+
+
+# ---------------------------------------------------------------------------
+# CarbonTrace unit tests
+# ---------------------------------------------------------------------------
+
+def test_flat_trace_is_scalar_accounting():
+    f = flat_trace(0.39)
+    assert f.is_flat
+    assert f.intensity_at(12345.0) == 0.39
+    assert f.integral(0.0, 3600.0) == pytest.approx(0.39 * 3600.0)
+    # 1 kW for 1 h = 1 kWh = 0.39 kg
+    assert f.carbon_kg(1000.0, 0.0, 3600.0) == pytest.approx(0.39)
+
+
+def test_two_segment_trace_hand_computed():
+    """0.2 kg/kWh at t=0 rising linearly to 0.6 at 12 h, wrapping back
+    down to 0.2 at 24 h: every quantity is a trapezoid by hand."""
+    tr = CarbonTrace("two", ((0.0, 0.2), (HALF, 0.6)))
+    assert tr.intensity_at(0.0) == pytest.approx(0.2)
+    assert tr.intensity_at(HALF) == pytest.approx(0.6)
+    assert tr.intensity_at(HALF / 2) == pytest.approx(0.4)
+    assert tr.intensity_at(18 * 3600.0) == pytest.approx(0.4)  # wrap leg
+    day = tr.integral(0.0, DAY)
+    assert day == pytest.approx((0.2 + 0.6) * HALF, rel=1e-12)
+    assert tr.daily_mean_kg_per_kwh == pytest.approx(0.4, rel=1e-12)
+    # partial window [0, 6 h]: mean of endpoints 0.2 and 0.4
+    assert tr.integral(0.0, HALF / 2) == pytest.approx(0.3 * HALF / 2,
+                                                       rel=1e-12)
+    # window straddling a period boundary == one whole period
+    assert tr.integral(10_000.0, DAY + 10_000.0) == pytest.approx(day,
+                                                                  rel=1e-9)
+    assert tr.integral(0.0, 3 * DAY) == pytest.approx(3 * day, rel=1e-9)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        CarbonTrace("x", ())
+    with pytest.raises(ValueError, match="strictly increasing"):
+        CarbonTrace("x", ((0.0, 1.0), (0.0, 2.0)))
+    with pytest.raises(ValueError, match="negative"):
+        CarbonTrace("x", ((0.0, -1.0),))
+    with pytest.raises(ValueError, match="period"):
+        CarbonTrace("x", ((0.0, 1.0), (DAY, 2.0)))
+    with pytest.raises(KeyError, match="unknown carbon trace"):
+        make_trace("nope", 0.39)
+
+
+@pytest.mark.parametrize("gen", [solar_duck, wind_night])
+def test_generators_hit_target_mean(gen):
+    tr = gen(0.39)
+    assert tr.daily_mean_kg_per_kwh == pytest.approx(0.39, rel=1e-9)
+    vals = [v for _, v in tr.points]
+    assert min(vals) > 0.0 and max(vals) / min(vals) > 1.5  # real swing
+
+
+def test_solar_duck_shape():
+    """Midday solar belly is the trough, evening ramp the peak."""
+    tr = solar_duck(0.39)
+    assert tr.intensity_at(13 * 3600.0) < tr.intensity_at(4 * 3600.0) \
+        < tr.intensity_at(20 * 3600.0)
+
+
+def test_zone_presets_preserve_means():
+    for zone, mix in MIXES.items():
+        tr = trace_for_zone(zone)
+        assert tr.daily_mean_kg_per_kwh == pytest.approx(
+            mix.gwp_kg_per_kwh, rel=1e-9), zone
+    assert trace_for_zone("usa").name == "solar-duck"
+    assert trace_for_zone("FRA").is_flat
+
+
+def test_carbon_timeline_bins():
+    f = flat_trace(0.39)
+    segs = [(0.0, HALF, 100.0), (HALF, DAY, 50.0)]
+    tl = carbon_timeline_kg(f, segs)
+    assert len(tl) == 24
+    assert all(b >= a - 1e-15 for (_, a), (_, b) in zip(tl, tl[1:]))
+    assert tl[-1][1] == pytest.approx(f.carbon_for_segments(segs), rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# CarbonBreakeven stopping rule
+# ---------------------------------------------------------------------------
+
+def test_carbon_breakeven_flat_is_energy_breakeven():
+    pol = CarbonBreakeven(QWEN25_7B_MEASURED, H100,
+                          carbon_trace=flat_trace(0.39))
+    ref = Breakeven(QWEN25_7B_MEASURED, H100)
+    assert pol.idle_timeout_s(0.0) == pytest.approx(ref.t_star_s)
+    bare = CarbonBreakeven(QWEN25_7B_MEASURED, H100)   # no trace bound
+    assert bare.idle_timeout_s(5000.0) == pytest.approx(ref.t_star_s)
+
+
+def test_carbon_breakeven_shifts_reloads_toward_clean_hours():
+    """Rising intensity ahead -> a reload would land dearer -> hold
+    longer; falling intensity -> evict early, reload lands cheap."""
+    rising = CarbonTrace("up", ((0.0, 0.2), (HALF, 0.6)))
+    pol = CarbonBreakeven(QWEN25_7B_MEASURED, H100, carbon_trace=rising)
+    t_star = pol.t_star_s
+    up = pol.idle_timeout_s(2 * 3600.0)       # on the rising leg
+    down = pol.idle_timeout_s(14 * 3600.0)    # on the falling leg
+    assert up > t_star > down
+    assert up <= CarbonBreakeven._CAP_TSTARS * t_star
+
+
+# ---------------------------------------------------------------------------
+# fleetsim integration: equivalence anchors
+# ---------------------------------------------------------------------------
+
+def test_flat_trace_reproduces_scalar_carbon():
+    """Acceptance: flat-trace fleetsim carbon == energy * scalar to
+    1e-9 kg, across routers and with consolidation in play."""
+    for router, cons in (("warm-first", False), ("energy-greedy", True)):
+        res = run_fleet(mixed_fleet_scenario(
+            Breakeven, router, consolidate=cons, n_models=6,
+            fleet="h100+a100+l40s", horizon_s=6 * 3600.0, seed=7))
+        mix = get_mix("USA")
+        scalar = res.energy_wh / 1e3 * mix.gwp_kg_per_kwh
+        assert res.carbon_kg == pytest.approx(scalar, abs=1e-9)
+        assert res.carbon_kg == pytest.approx(res.carbon_kg_flat, abs=1e-9)
+        assert res.carbon_trace_name == "flat"
+
+
+def test_two_segment_trace_fleet_integration_hand_computed():
+    """One H100, one always-on model warm from t=0, no requests: power
+    is p_ctx_w for the whole day, so fleet carbon is exactly
+    p_ctx * integral(trace) / 3.6e6 -- checkable by hand."""
+    tr = CarbonTrace("two", ((0.0, 0.2), (HALF, 0.6)))
+    devices = build_fleet("h100")
+    spec = FleetModelSpec("m", AlwaysOn, loader=QWEN25_7B_MEASURED,
+                          vram_gb=10.0, home="h100-0")
+    res = run_fleet(FleetScenario(devices=devices,
+                                  models=[FleetModel(spec, [])],
+                                  horizon_s=DAY, carbon_trace=tr))
+    expected = H100.p_ctx_w * (0.2 + 0.6) * HALF / 3.6e6
+    assert res.carbon_kg == pytest.approx(expected, abs=1e-12)
+    assert res.carbon_trace_name == "two"
+    # flat reference: same energy, mean intensity -> same number here
+    # (constant power integrates the mean)
+    assert res.carbon_kg == pytest.approx(
+        res.energy_wh / 1e3 * 0.4, abs=1e-9)
+
+
+def test_device_carbon_sums_to_fleet_carbon():
+    res = run_fleet(mixed_fleet_scenario(
+        Breakeven, "energy-greedy", n_models=6, fleet="h100+a100+l40s",
+        horizon_s=6 * 3600.0, seed=3, carbon_trace="solar-duck"))
+    assert res.carbon_kg == pytest.approx(
+        sum(d.carbon_kg for d in res.devices), rel=1e-12)
+    assert res.carbon_trace_name == "solar-duck"
+    # the trace moves carbon but not joules
+    assert res.carbon_kg != pytest.approx(res.carbon_kg_flat, abs=1e-6)
+    # cumulative timeline ends at the total
+    assert res.carbon_timeline[-1][1] == pytest.approx(res.carbon_kg,
+                                                       rel=1e-9)
+
+
+def test_carbon_with_reprices_identical_schedule():
+    """Routers/policies that ignore the trace produce the SAME schedule
+    under any trace, so simulating under the duck equals re-pricing the
+    flat run's power timeline (the zone-sweep instrument)."""
+    kw = dict(n_models=4, fleet="h100+a100", horizon_s=6 * 3600.0, seed=5)
+    flat = run_fleet(mixed_fleet_scenario(Breakeven, "energy-greedy", **kw))
+    duck = run_fleet(mixed_fleet_scenario(Breakeven, "energy-greedy",
+                                          carbon_trace="solar-duck", **kw))
+    assert duck.energy_wh == pytest.approx(flat.energy_wh, rel=1e-12)
+    duck_trace = make_trace("solar-duck", get_mix("USA").gwp_kg_per_kwh)
+    assert flat.carbon_with(duck_trace) == pytest.approx(duck.carbon_kg,
+                                                         rel=1e-12)
+
+
+def test_single_device_energy_anchor_survives_carbon_trace():
+    """The 1-device x 1-model equivalence to core/simulator.py (1e-6 Wh)
+    must hold with a diurnal trace bound: the trace changes carbon
+    pricing, never the energy dynamics of trace-blind policies."""
+    arr = traffic.PATTERNS["bursty"](seed=7)
+    sim = simulate(arr, FixedTTL(300.0), H100, PYTORCH_70B)
+    sc = single_device_scenario(arr, lambda: FixedTTL(300.0), PYTORCH_70B,
+                                "h100")
+    sc.carbon_trace = "solar-duck"
+    res = run_fleet(sc)
+    assert res.energy_wh == pytest.approx(sim.energy_wh, abs=1e-6)
+    assert res.cold_starts == sim.cold_starts
+
+
+# ---------------------------------------------------------------------------
+# single source of truth: impact <-> catalog (ISSUE 4 satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_us_grid_intensity_single_source_of_truth():
+    assert MIXES["USA"].gwp_kg_per_kwh is US_GRID_KG_CO2_PER_KWH
+
+
+def test_paper_180kt_regression():
+    """Paper section 6: the BASE scenario prices ~462 GWh/yr at the US
+    grid intensity => ~180 kT CO2e/yr."""
+    assert BASE.energy_gwh_per_year == pytest.approx(462.0, rel=0.01)
+    assert BASE.co2_kt_per_year == pytest.approx(180.0, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the pinned 10x6 day under a solar-duck trace
+# ---------------------------------------------------------------------------
+
+def test_carbon_aware_cuts_kg_at_equal_or_better_p99_pinned_day():
+    """Acceptance (ISSUE 4): on the 10-model x 6-GPU day (seed 100) with
+    roofline service times under a solar-duck trace, the carbon-aware
+    stack (carbon-breakeven eviction + carbon routing + carbon-aware
+    consolidation) emits LESS kgCO2e than breakeven + energy-greedy at
+    equal-or-better p99.  (Measured: 3.2785 vs 3.2798 kg at p99 116.1
+    vs 119.8 s; the delta is ~0.5% of the schedulable carbon above the
+    trace-invariant bare-idle floor -- see docs/CARBON.md.)"""
+    svc = RooflineServiceTime()
+    kw = dict(service_model=svc, carbon_trace="solar-duck", seed=100)
+    eg = run_fleet(mixed_fleet_scenario(Breakeven, "energy-greedy", **kw))
+    ca = run_fleet(mixed_fleet_scenario(
+        CarbonBreakeven, CarbonAwareRouter(math.inf),
+        consolidate=Consolidator(carbon_aware=True, period_s=300.0), **kw))
+    assert ca.carbon_kg < eg.carbon_kg
+    assert ca.p99_added_latency_s <= eg.p99_added_latency_s
+    # sanity: both serve the same workload at comparable joules
+    assert ca.requests == eg.requests
+    assert abs(ca.energy_wh / eg.energy_wh - 1.0) < 0.01
+    # the budgeted variant trades carbon for latency along the Pareto
+    slo = run_fleet(mixed_fleet_scenario(
+        CarbonBreakeven, CarbonAwareRouter(90.0),
+        consolidate=Consolidator(carbon_aware=True, period_s=300.0), **kw))
+    assert slo.p99_added_latency_s <= 90.0
+    assert slo.carbon_kg >= ca.carbon_kg
