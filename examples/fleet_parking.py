@@ -21,12 +21,17 @@ per model in flight -- and walks the energy/latency Pareto the
 SLO-aware router trades along (energy min subject to a p99
 added-latency budget).
 
-The final table prices the day in carbon: the same fleet under a
+The third table prices the day in carbon: the same fleet under a
 solar-duck grid-intensity trace (fleet/carbon.py), with the carbon-aware
 stack (carbon-breakeven eviction + carbon routing + carbon-aware
 consolidation) against energy-greedy, and the schedule re-priced across
 electricity zones (carbon is a post-hoc integral over the metered power
 timeline, so zones need no re-simulation).
+
+The final table opens the bare-idle floor itself: device power gating
+(core/power_states.py sleep/wake state machine) puts fully drained
+devices to SLEEP past the wake-energy breakeven, cutting below the
+p_base_w floor every other policy treats as untouchable.
 
 Run:  PYTHONPATH=src python examples/fleet_parking.py
 """
@@ -143,6 +148,34 @@ def main() -> None:
         f"{zone} {ca_c.carbon_with(trace_for_zone(zone)):7.3f}"
         for zone in sorted(MIXES))
     print(f"  {row}")
+
+    # -- device power gating: opening the bare-idle floor -----------------
+    # ~92% of fleet carbon is the trace-invariant p_base floor; the
+    # sleep/wake state machine (core/power_states.py) is the first
+    # mechanism that cuts below it.  Consolidation drains devices,
+    # gate_drained_devices puts them to SLEEP past the wake-energy
+    # breakeven, and routing prices wake latency + energy into cold
+    # placement so the p99 budget still holds.
+    best_nongated = run_fleet(mixed_fleet_scenario(
+        Breakeven, "energy-greedy", consolidate=True, service_model=svc))
+    gated = run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(90.0), service_model=svc,
+        consolidate=Consolidator(period_s=300.0,
+                                 gate_drained_devices=True)))
+    print("\ndevice power gating (sleep/wake; see docs/POWER.md):")
+    for name, res in (("best non-gated (energy-greedy + consolidate)",
+                       best_nongated),
+                      ("slo-aware (90 s) + consolidate + gating", gated)):
+        print(f"  {name:46s} {res.energy_wh:9.1f} Wh  "
+              f"p99 {res.p99_added_latency_s:6.2f} s")
+    sleep_h = gated.state_durations_s.get("sleep", 0.0) / 3600.0
+    print(f"  {gated.gates} gates / {gated.wakes} wakes, {sleep_h:.0f} "
+          f"device-hours asleep; {gated.gated_wh_saved:.0f} Wh recovered "
+          f"from the bare-idle floor -- "
+          f"{100 * gated.savings_vs(best_nongated):.0f}% below the best "
+          f"non-gated policy (and below its clairvoyant bound "
+          f"{best_nongated.lb_shared_wh:.0f} Wh, which assumed devices "
+          f"never sleep)")
 
 
 if __name__ == "__main__":

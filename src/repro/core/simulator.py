@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.core.coldstart import LoaderSpec
 from repro.core.power_model import DeviceProfile
+from repro.core.power_states import (PowerState, PowerStateMachine,
+                                     state_power_w)
 from repro.core.scheduler import Policy
 
 
@@ -70,11 +72,16 @@ def simulate(
     latency_s = 0.0
     cold_starts = 1 if start_warm else 0   # initial load (paper counts 1)
 
-    p_ctx = profile.p_ctx_w
-    p_base = profile.p_base_w
-    p_load = loader.p_load_w
+    # per-state power from the shared state machine (power_states): the
+    # same formula the serving EnergyMeter integrates, so the layers
+    # cannot drift apart
+    p_ctx = state_power_w(profile, PowerState.CTX_IDLE)
+    p_base = state_power_w(profile, PowerState.BARE)
+    p_load = state_power_w(profile, PowerState.LOADING, loader)
     t_load = loader.t_load_s
-    p_serve = profile.active_power_w(service_util) if service_s > 0 else p_ctx
+    p_serve = state_power_w(profile, PowerState.ACTIVE,
+                            service_util=service_util) \
+        if service_s > 0 else p_ctx
 
     def spend(dt: float, watts: float) -> None:
         nonlocal energy_j
@@ -83,6 +90,12 @@ def simulate(
 
     t = 0.0           # simulation clock: model is warm-idle at `t` if `warm`
     warm = start_warm
+    # validated state walk alongside the closed-form integration: every
+    # warm/evict/load edge below is a legal machine transition (a
+    # miswired edge raises IllegalPowerTransition here, in the
+    # REFERENCE dynamics, before any meter could misprice it)
+    machine = PowerStateMachine(
+        PowerState.CTX_IDLE if start_warm else PowerState.BARE, t)
     n = len(arrivals)
     i = 0
     while i < n:
@@ -98,6 +111,7 @@ def simulate(
                 warm_idle_s += stay
                 if stay < gap:            # evicted mid-gap
                     warm = False
+                    machine.to(PowerState.BARE, t + stay)
                     spend(gap - stay, p_base)
                     evicted_s += gap - stay
             else:
@@ -109,10 +123,12 @@ def simulate(
         if not warm:
             # --- cold start -----------------------------------------------
             cold_starts += 1
+            machine.to(PowerState.LOADING, ready)
             load_end = ready + t_load
             spend(t_load, p_load)
             loading_s += t_load
             warm = True
+            machine.to(PowerState.CTX_IDLE, load_end)
             ready = load_end
         # serve this request plus anything that arrived before `ready`
         j = i
@@ -122,8 +138,12 @@ def simulate(
             latency_s += ready - arrivals[j]
             j += 1
         batch = j - i
+        if service_s > 0:
+            machine.to(PowerState.ACTIVE, ready)
         spend(batch * service_s, p_serve)
         t = ready + batch * service_s
+        if service_s > 0:
+            machine.to(PowerState.CTX_IDLE, t)
         i = j
 
     # --- trailing interval [t, horizon) ----------------------------------
@@ -135,6 +155,7 @@ def simulate(
             spend(stay, p_ctx)
             warm_idle_s += stay
             if stay < gap:
+                machine.to(PowerState.BARE, t + stay)
                 spend(gap - stay, p_base)
                 evicted_s += gap - stay
         else:

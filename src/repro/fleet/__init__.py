@@ -10,7 +10,8 @@ from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
                                  ElectricityMix, GPUSku, above_base_load_j,
                                  build_fleet, carbon_kg, energy_cost_usd,
                                  fleet_price_usd, get_mix, get_sku,
-                                 marginal_park_w, scaleout_cost_j)
+                                 marginal_park_w, scaleout_cost_j,
+                                 wake_cost_j)
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
 from repro.fleet.router import (BreakevenRouter, CarbonAwareRouter,
                                 Consolidator, EnergyGreedyRouter,
@@ -25,7 +26,7 @@ __all__ = [
     "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
     "build_fleet", "carbon_kg", "energy_cost_usd", "fleet_price_usd",
     "get_mix", "get_sku", "above_base_load_j", "marginal_park_w",
-    "scaleout_cost_j",
+    "scaleout_cost_j", "wake_cost_j",
     "CarbonBreakeven", "CarbonTrace", "TRACE_SHAPES", "carbon_timeline_kg",
     "flat_trace", "make_trace", "solar_duck", "trace_for_zone", "wind_night",
     "ReplicaAutoscaler", "ScaleOut", "ScaleIn",

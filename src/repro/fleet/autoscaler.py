@@ -44,9 +44,11 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Union
 
+from repro.core.power_states import PowerState
 from repro.fleet.carbon import CarbonTrace, _J_PER_KWH
 from repro.fleet.catalog import (above_base_load_j, marginal_park_w,
-                                 scaleout_cost_j)
+                                 scaleout_cost_j, wake_cost_j,
+                                 wake_cost_kg)
 from repro.fleet.cluster import Cluster
 
 
@@ -309,8 +311,14 @@ class ReplicaAutoscaler:
                 continue
             window = min(gap * (n + 1), hold)
             ctx_on = cluster.context_on(d)
+            # a gated candidate pays its wake on top: ramp energy above
+            # sleep + the bare-minus-sleep delta over the demand window
+            # (in carbon mode, at the current window's intensity)
+            wake_j = wake_cost_j(dev, window) \
+                if cluster.power_state(d) is PowerState.SLEEP else 0.0
             if trace is None:
-                cost = scaleout_cost_j(dev, ld, window, context_on=ctx_on)
+                cost = scaleout_cost_j(dev, ld, window, context_on=ctx_on) \
+                    + wake_j
             else:
                 # kgCO2e analogue of scaleout_cost_j: the load burst at
                 # the CURRENT intensity (this is what drags prewarm-style
@@ -322,8 +330,12 @@ class ReplicaAutoscaler:
                 park_kg = marginal_park_w(dev, ctx_on) \
                     * trace.integral(t_warm, t_warm + max(window, 0.0)) \
                     / _J_PER_KWH
-                cost = load_kg + park_kg
-            key = (cost, cluster.load_backlog_s(d, now_s), d)
+                wake_kg = wake_cost_kg(dev, trace, now_s, t_warm,
+                                       window) if wake_j > 0.0 else 0.0
+                cost = load_kg + park_kg + wake_kg
+            lag_s = cluster.load_backlog_s(d, now_s) \
+                + (dev.profile.wake_latency_s if wake_j > 0.0 else 0.0)
+            key = (cost, lag_s, d)
             if best_key is None or key < best_key:
                 best, best_key = d, key
         return ScaleOut(mid, best) if best is not None else None

@@ -20,6 +20,7 @@ import dataclasses
 import re
 from typing import Dict, List, Sequence, Union
 
+from repro.core import power_states
 from repro.core.impact import US_GRID_KG_CO2_PER_KWH
 from repro.core.power_model import DeviceProfile, get_profile
 
@@ -208,9 +209,36 @@ def marginal_park_w(device: DeviceInstance, context_on: bool) -> float:
 
 def above_base_load_j(device: DeviceInstance, loader) -> float:
     """Above-bare-idle energy of one (re)load on this device (the
-    energy-exact reload cost the autoscaler's ski-rental tests use)."""
-    return max(loader.p_load_w - device.profile.p_base_w, 0.0) \
-        * loader.t_load_s
+    energy-exact reload cost the autoscaler's ski-rental tests use).
+    Load watts resolve through ``DeviceProfile.load_power_w`` -- the
+    loader's own number when it has one, the SKU's catalog ``p_load_w``
+    otherwise -- the same rule the EnergyMeter prices LOADING with."""
+    return max(device.profile.load_power_w(loader)
+               - device.profile.p_base_w, 0.0) * loader.t_load_s
+
+
+def wake_cost_j(device: DeviceInstance, hold_s: float = 0.0) -> float:
+    """Marginal joules of WAKING this device for a placement versus
+    leaving it gated: the wake ramp's above-sleep energy plus the
+    bare-minus-sleep delta over the expected awake window.  Added to a
+    sleeping candidate's cold-placement score by the energy-aware
+    routers and the autoscaler (gated devices are cheap watts but not
+    free first-token)."""
+    return power_states.wake_penalty_j(device.profile, hold_s)
+
+
+def wake_cost_kg(device: DeviceInstance, trace, now_s: float,
+                 t_warm_s: float, hold_s: float) -> float:
+    """kgCO2e analogue of ``wake_cost_j`` under a grid-intensity trace:
+    the ramp burst priced at the [now, t_warm] window's mean intensity,
+    the above-sleep hold INTEGRATED over its own window (the hold can
+    span trace swings).  One formula for the carbon-aware router and
+    autoscaler, so the two cannot drift apart."""
+    prof = device.profile
+    return (wake_cost_j(device, 0.0) * trace.mean(now_s, t_warm_s)
+            + (prof.p_base_w - prof.p_sleep_w)
+            * trace.integral(t_warm_s, t_warm_s + max(hold_s, 0.0))
+            ) / 3.6e6
 
 
 def scaleout_cost_j(device: DeviceInstance, loader, hold_s: float, *,

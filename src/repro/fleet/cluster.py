@@ -30,10 +30,12 @@ import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
+from repro.core.power_states import PowerState, state_power_w
 from repro.core.scheduler import Policy
 from repro.fleet.catalog import DeviceInstance
 from repro.serving.energy import SimClock
 from repro.serving.model_manager import ManagedModel, ModelManager
+from repro.serving.slots import WAKE_CHANNEL
 
 
 def _make_policy(factory: Callable[..., Policy], loader: LoaderSpec,
@@ -124,6 +126,7 @@ class Cluster:
         self.rep_rates: Dict[Tuple[str, str], RateEstimator] = {}
         self._loaders: Dict[tuple, LoaderSpec] = {}
         self.migrations = 0
+        self.gates = 0          # devices put to SLEEP (power gating)
         # per-route warm-replica-count timeline: (t_s, count) appended
         # whenever snapshot_replicas observes a change
         self.replica_log: Dict[str, List[Tuple[float, int]]] = {}
@@ -325,9 +328,23 @@ class Cluster:
         accounting (flat p_load during loads, active_power_w(0.6) during
         service), preserving the single-device equivalence anchor; with
         overlap, each busy decode slot adds its above-context increment
-        on top of whichever base phase is running."""
+        on top of whichever base phase is running.
+
+        Gated devices are the state machine's business, not the
+        composer's: a SLEEPING device is left asleep (nothing can be in
+        flight there -- illegal transitions would have raised earlier),
+        and an in-flight wake ramp keeps its override so a racing event
+        cannot settle the ramp's watts away mid-wake."""
         mm = self.managers[device_id]
         prof = self.devices[device_id].profile
+        if mm.meter.state is PowerState.SLEEP:
+            return
+        rt = self.runtime.get(device_id)
+        if rt is not None and rt.loading == WAKE_CHANNEL:
+            mm.meter.transition(
+                PowerState.BARE,
+                power_override_w=mm.meter.power_override_w)
+            return
         loading = next((m for m in mm.models.values() if m.loading), None)
         busy = self.busy_slots(device_id)
         if busy > 0:
@@ -335,21 +352,65 @@ class Cluster:
                 else prof.idle_power_w(context_active=True)
             p = base + busy * (prof.active_power_w(service_util)
                                - prof.p_ctx_w)
-            mm.meter.transition("active", power_override_w=p)
+            mm.meter.transition(PowerState.ACTIVE, power_override_w=p)
         elif loading is not None:
-            mm.meter.transition("loading",
+            mm.meter.transition(PowerState.LOADING,
                                 power_override_w=loading.loader.p_load_w)
         else:
             mm.settle()
 
     def idle_power_w(self) -> float:
-        """Instantaneous fleet idle power from context state (Eq. 1 summed
-        over devices; loading/active bursts excluded by design -- this is
-        the steady-state quantity consolidation optimizes)."""
+        """Instantaneous fleet idle power from power state (Eq. 1 summed
+        over devices, with gated devices at their sleep floor;
+        loading/active bursts excluded by design -- this is the
+        steady-state quantity consolidation + gating optimize)."""
         total = 0.0
         for did, dev in self.devices.items():
-            total += dev.profile.idle_power_w(self.context_on(did))
+            if self.power_state(did) is PowerState.SLEEP:
+                total += dev.profile.p_sleep_w
+            else:
+                total += dev.profile.idle_power_w(self.context_on(did))
         return total
+
+    # -- power gating (sleep/wake; core/power_states.py) ---------------------
+    def power_state(self, device_id: str) -> PowerState:
+        """The device's current power state (its meter's machine)."""
+        return self.managers[device_id].meter.state
+
+    def gate_device(self, device_id: str) -> bool:
+        """Put a fully drained device to SLEEP now, if it is safe to:
+        meter settled at BARE (no residents, no burst in flight) and no
+        runtime work queued on its loader channel or decode slots.
+        Returns whether the device actually gated."""
+        mm = self.managers[device_id]
+        if mm.meter.state is not PowerState.BARE:
+            return False
+        if self.occupancy(device_id) > 0:
+            return False
+        rt = self.runtime.get(device_id)
+        if rt is not None and rt.busy:
+            return False
+        mm.meter.gate()
+        self.gates += 1
+        return True
+
+    def start_wake(self, device_id: str) -> float:
+        """Begin the SLEEP -> BARE wake ramp; returns its duration.  The
+        fleet event loop serializes it on the device's loader channel
+        (``WAKE_CHANNEL``) so loads start only once the device is up."""
+        return self.managers[device_id].meter.begin_wake()
+
+    def finish_wake(self, device_id: str) -> None:
+        self.managers[device_id].meter.finish_wake()
+
+    def bare_idle_s(self, device_id: str, now_s: float) -> float:
+        """How long the device has been settled at BARE (0 when in any
+        other state) -- the realized wait the gating ski rental tests
+        against ``gate_breakeven_s``."""
+        meter = self.managers[device_id].meter
+        if meter.state is not PowerState.BARE:
+            return 0.0
+        return max(now_s - meter.state_since_s(), 0.0)
 
     # -- time ---------------------------------------------------------------
     def advance_to(self, target_s: float) -> None:
@@ -407,7 +468,7 @@ class Cluster:
         if service_s > 0 and not self.runtime:
             # legacy blocking path (no concurrent runtime attached): the
             # caller owns advancing the clock through the service window
-            self.managers[device_id].meter.transition("active")
+            self.managers[device_id].meter.transition(PowerState.ACTIVE)
 
     def end_serve(self, device_id: str, model_id: str) -> None:
         mm = self.managers[device_id]

@@ -45,6 +45,15 @@ the SAME joules cost different kgCO2e depending on WHEN they are drawn,
 which is what the carbon-aware router/consolidator/autoscaler modes
 optimize against.
 
+Power gating (core/power_states.py): with a ``Consolidator`` in
+``gate_drained_devices`` mode, fully drained devices fall below
+``p_base_w`` to SLEEP once their bare idle clears the wake-energy
+breakeven; a load routed to a gated device first runs the SLEEP -> BARE
+wake ramp on the device's loader channel (``WAKE_CHANNEL``), so wake
+latency and wake energy are metered like any other phase.
+``FleetResult`` reports per-state Wh/seconds and ``gated_wh_saved`` --
+the first mechanism that cuts below the bare-idle floor.
+
 The clairvoyant lower bound reported alongside is the cluster analogue
 of ``scheduler.Clairvoyant``: per model, offline per-gap ski rental
 using the fleet's BEST constants (min DVFS step across devices, min
@@ -65,6 +74,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.coldstart import loader_from_checkpoint
+from repro.core.power_states import PowerState
 from repro.fleet.autoscaler import ReplicaAutoscaler, ScaleOut
 from repro.fleet.carbon import (CarbonTrace, carbon_timeline_kg, flat_trace,
                                 make_trace, trace_for_zone)
@@ -73,7 +83,7 @@ from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
 from repro.fleet.cluster import Cluster, FleetModelSpec
 from repro.fleet.router import Consolidator, Router, get_router
 from repro.serving.service_model import ConstantServiceTime, ServiceTimeModel
-from repro.serving.slots import DeviceRuntime
+from repro.serving.slots import DeviceRuntime, WAKE_CHANNEL
 
 DAY = 24 * 3600.0
 
@@ -135,13 +145,18 @@ class FleetScenario:
 class DeviceReport:
     instance_id: str
     sku: str
-    energy_wh: Dict[str, float]          # by meter state + "total"
+    energy_wh: Dict[str, float]          # by power state + "total"
     parking_tax_wh: float
     cold_starts: int
     requests: int
     resident: List[str]                  # models resident at horizon end
-    meter_state: str                     # meter state at horizon end
+    meter_state: str                     # power state at horizon end
     carbon_kg: float = 0.0               # trace-integrated device emissions
+    # per-power-state seconds (same keys as energy_wh, minus "total")
+    durations_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    wakes: int = 0                       # SLEEP -> BARE ramps metered
+    # Wh below what bare idle would have cost over the gated windows
+    gated_wh_saved: float = 0.0
 
     @property
     def total_wh(self) -> float:
@@ -184,6 +199,19 @@ class FleetResult:
     # a POST-HOC integral over these, so one run can be re-priced under
     # any trace/zone without re-simulating (see carbon_with)
     power_timeline: Sequence[Tuple[float, float, float]] = ()
+    # power-state machine breakdowns (core/power_states.py): fleet-wide
+    # Wh and seconds per state (summed over devices; keys are the state
+    # wire names -- "sleep"/"bare"/"parked"/"loading"/"active")
+    state_energy_wh: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    state_durations_s: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    # power gating: devices put to SLEEP, wake ramps metered, and the Wh
+    # the gated windows saved vs idling bare through them -- the first
+    # mechanism that cuts BELOW the p_base floor
+    gates: int = 0
+    wakes: int = 0
+    gated_wh_saved: float = 0.0
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or
@@ -333,8 +361,18 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
 
     def pump_loader(did: str, now: float) -> None:
         """Start the next queued (re)load/migration if the serialized
-        loader channel is free."""
+        loader channel is free.  A gated device wakes FIRST: the
+        SLEEP -> BARE ramp serializes on the same channel (nothing can
+        ingest weights on a sleeping device -- the state machine would
+        raise), and the queued loads start when the wake lands."""
         r = rt[did]
+        if (r.loading is None and r.load_q
+                and cluster.power_state(did) is PowerState.SLEEP):
+            dt = cluster.start_wake(did)
+            r.loading = WAKE_CHANNEL
+            r.loading_until = now + dt
+            push(now + dt, _P_DONE, "wake_done", (did,))
+            return
         while r.loading is None and r.load_q:
             item = r.load_q.popleft()
             mid = item[-1]
@@ -390,6 +428,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             rep.evict_at = math.inf
             dispatch(did, mid, t, t)
             cluster.sync_power(did)
+        elif kind == "wake_done":
+            (did,) = data
+            rt[did].loading = None
+            cluster.finish_wake(did)
+            pump_loader(did, t)              # start the queued loads
+            cluster.sync_power(did)
         elif kind == "load_done":
             did, mid = data
             r = rt[did]
@@ -444,6 +488,11 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
                 rt[mv.dst].load_q.append(("mig", mv.src, mv.model_id))
                 pump_loader(mv.dst, t)
                 cluster.sync_power(mv.dst)
+            # power gating rides the same tick: devices the packing
+            # passes drained (and anything else settled at bare past the
+            # wake-energy breakeven) fall below p_base to SLEEP
+            for did in sc.consolidator.plan_gating(cluster, t, busy_map):
+                cluster.gate_device(did)
             nxt = t + sc.consolidator.period_s
             if nxt < sc.horizon_s:
                 push(nxt, _P_CONS, "consolidate", ())
@@ -476,12 +525,23 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             energy_wh=totals[did],
             parking_tax_wh=mm.meter.parking_tax_wh(),
             cold_starts=d_cold, requests=d_reqs,
-            resident=mm.resident_ids(), meter_state=mm.meter.state,
-            carbon_kg=trace.carbon_for_segments(mm.meter.timeline)))
+            resident=mm.resident_ids(), meter_state=mm.meter.state.value,
+            carbon_kg=trace.carbon_for_segments(mm.meter.timeline),
+            durations_s=mm.meter.durations(),
+            wakes=mm.meter.wakes,
+            gated_wh_saved=mm.meter.gated_wh_saved()))
 
     lb_shared, cv_sum = clairvoyant_bound(sc)
     energy = sum(r.total_wh for r in reports)
     mix = get_mix(sc.zone)
+    state_wh: Dict[str, float] = {}
+    state_s: Dict[str, float] = {}
+    for r in reports:
+        for k, v in r.energy_wh.items():
+            if k != "total":
+                state_wh[k] = state_wh.get(k, 0.0) + v
+        for k, v in r.durations_s.items():
+            state_s[k] = state_s.get(k, 0.0) + v
     return FleetResult(
         router=router.name, horizon_s=sc.horizon_s, devices=reports,
         energy_wh=energy,
@@ -501,7 +561,11 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         replica_timeline={mid: list(log)
                           for mid, log in cluster.replica_log.items()},
         scale_outs=(sc.autoscaler.scale_outs if sc.autoscaler else 0),
-        scale_ins=(sc.autoscaler.scale_ins if sc.autoscaler else 0))
+        scale_ins=(sc.autoscaler.scale_ins if sc.autoscaler else 0),
+        state_energy_wh=state_wh, state_durations_s=state_s,
+        gates=cluster.gates,
+        wakes=sum(r.wakes for r in reports),
+        gated_wh_saved=math.fsum(r.gated_wh_saved for r in reports))
 
 
 # ---------------------------------------------------------------------------
@@ -529,7 +593,10 @@ def clairvoyant_bound(sc: FleetScenario) -> Tuple[float, float]:
 
     Assumes the paper's evaluation convention of service energy held
     constant across policies (service_s == 0); with service enabled the
-    bound still excludes service energy and is simply looser.
+    bound still excludes service energy and is simply looser.  The
+    ``p_base`` floor term assumes devices never sleep: a power-GATED
+    run (Consolidator ``gate_drained_devices``) can legitimately land
+    BELOW this bound -- that is the point of gating.
     """
     base_j = sum(d.profile.p_base_w for d in sc.devices) * sc.horizon_s
     extras = []

@@ -54,8 +54,10 @@ import math
 from typing import List, Optional, Tuple
 
 from repro.core.breakeven import breakeven_seconds
+from repro.core.power_states import PowerState, gate_breakeven_s
 from repro.fleet.carbon import CarbonTrace, _J_PER_KWH
-from repro.fleet.catalog import above_base_load_j, marginal_park_w
+from repro.fleet.catalog import (above_base_load_j, marginal_park_w,
+                                 wake_cost_j, wake_cost_kg)
 from repro.fleet.cluster import Cluster
 
 
@@ -124,7 +126,11 @@ class Router:
         its DVFS step, so packing there parks for free).  With
         ``steady_state`` the per-arrival-period ski-rental cost
         min(step * E[gap], reload) is added, making low-step devices win
-        for sub-breakeven traffic."""
+        for sub-breakeven traffic.  A GATED (sleeping) candidate also
+        pays its wake cost -- ramp energy above sleep plus the
+        bare-minus-sleep delta over the expected hold -- so routers only
+        wake a device when cheaper watts genuinely beat staying on an
+        already-awake one."""
         gap = cluster.rates[model_id].expected_gap_s()
 
         def score(did: str) -> Tuple[float, str]:
@@ -135,9 +141,14 @@ class Router:
                                      cluster.context_on(did))
             t_star = breakeven_seconds(ld, prof, paper_convention=False)
             park_j = step_w * min(gap, t_star)
+            wake_j = 0.0
+            if cluster.power_state(did) is PowerState.SLEEP:
+                wake_j = wake_cost_j(cluster.devices[did],
+                                     min(gap, t_star))
             if steady_state:
-                return (load_j + min(step_w * gap, load_j + park_j), did)
-            return (load_j + park_j, did)
+                return (load_j + wake_j
+                        + min(step_w * gap, load_j + park_j), did)
+            return (load_j + wake_j + park_j, did)
 
         return score
 
@@ -245,9 +256,13 @@ class SLOAwareRouter(Router):
             return (cluster.load_residual_s(device_id, t_s)
                     + (waiting // slots) * svc_s)
         # cold: whatever the loader channel holds, then our own load
-        # (excluded from the backlog if a prior request already queued it)
+        # (excluded from the backlog if a prior request already queued
+        # it).  A still-gated device adds its wake latency up front; a
+        # wake ramp already in flight is counted by the channel residual.
         backlog = cluster.load_backlog_s(device_id, t_s,
                                          exclude_model=model_id)
+        if cluster.power_state(device_id) is PowerState.SLEEP:
+            backlog += cluster.devices[device_id].profile.wake_latency_s
         return backlog + cluster.loader_for(model_id, device_id).t_load_s
 
     def _cold_score(self, model_id: str, t_s: float, cluster: Cluster):
@@ -339,7 +354,12 @@ class CarbonAwareRouter(SLOAwareRouter):
                 step_w * trace.integral(t_warm, t_warm + min(gap, t_star))
                 / _J_PER_KWH
                 + load_j * trace.daily_mean_kg_per_kwh / _J_PER_KWH)
-            return (load_now + min(park_through, park_then_reload), did)
+            wake_kg = 0.0
+            if cluster.power_state(did) is PowerState.SLEEP:
+                wake_kg = wake_cost_kg(cluster.devices[did], trace,
+                                       t_s, t_warm, min(gap, t_star))
+            return (load_now + wake_kg
+                    + min(park_through, park_then_reload), did)
 
         return score
 
@@ -396,23 +416,45 @@ class Consolidator:
     With a flat trace both sides scale by the same constant, so the
     decisions are exactly the energy decisions.
 
+    Power gating (``gate_drained_devices=True``): the packing pass is
+    what CREATES fully drained devices, so the same controller also
+    decides when a drained device stops paying even ``p_base_w``: a
+    device settled at bare for at least ``gate_margin x T*_gate``
+    (``power_states.gate_breakeven_s`` -- the device-level ski rental:
+    one wake cycle's extra energy over the bare-minus-sleep saving
+    rate) is put to SLEEP.  Waiting out T*_gate before gating is the
+    classic 2-competitive rent-then-buy rule: whatever the adversarial
+    next placement does, the realized cost is at most twice the
+    clairvoyant's.  Routers price the wake (latency + energy) into cold
+    placement, so gated devices are only woken when genuinely worth it.
+
     Args:
       period_s:     planning cadence (sim seconds).
       margin:       require benefit >= margin * cost.
       lookahead_s:  cap on every counted window.
       carbon_aware: price benefit/cost in kgCO2e over the bound trace
                     (``run_fleet`` binds ``set_carbon_trace``).
+      gate_drained_devices: put bare-idle devices to SLEEP once their
+                    idle exceeds the gating breakeven (off by default:
+                    every pre-gating result is bit-identical).
+      gate_margin:  gate after ``gate_margin x T*_gate`` of bare idle.
     """
 
     def __init__(self, *, period_s: float = 900.0, margin: float = 1.0,
                  lookahead_s: float = 2 * 3600.0,
-                 carbon_aware: bool = False):
+                 carbon_aware: bool = False,
+                 gate_drained_devices: bool = False,
+                 gate_margin: float = 1.0):
         if period_s <= 0:
             raise ValueError("period must be positive")
+        if gate_margin <= 0:
+            raise ValueError("gate margin must be positive")
         self.period_s = period_s
         self.margin = margin     # require benefit >= margin * cost
         self.lookahead_s = lookahead_s
         self.carbon_aware = carbon_aware
+        self.gate_drained_devices = gate_drained_devices
+        self.gate_margin = gate_margin
         self.carbon_trace: Optional[CarbonTrace] = None
 
     def set_carbon_trace(self, trace: CarbonTrace) -> None:
@@ -547,3 +589,28 @@ class Consolidator:
                 free_slots, free_vram = slots, vram
                 win = trial_win
         return moves
+
+    def plan_gating(self, cluster: Cluster, now_s: float,
+                    busy: Optional[dict] = None) -> List[str]:
+        """Devices to put to SLEEP now (empty unless
+        ``gate_drained_devices``): settled at bare, no runtime work, and
+        bare-idle at least ``gate_margin x T*_gate`` (the device-level
+        ski rental -- see the class docstring).  The event loop applies
+        each through ``Cluster.gate_device``, which re-checks safety."""
+        if not self.gate_drained_devices:
+            return []
+        busy = busy or {}
+        out: List[str] = []
+        for did in sorted(cluster.devices):
+            if busy.get(did):
+                continue
+            if cluster.power_state(did) is not PowerState.BARE:
+                continue
+            if cluster.occupancy(did) > 0:
+                continue
+            t_gate = gate_breakeven_s(cluster.devices[did].profile)
+            if not math.isfinite(t_gate):
+                continue
+            if cluster.bare_idle_s(did, now_s) >= self.gate_margin * t_gate:
+                out.append(did)
+        return out

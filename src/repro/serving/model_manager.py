@@ -27,6 +27,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
 from repro.core.power_model import DeviceProfile
+from repro.core.power_states import PowerState
 from repro.core.scheduler import Policy
 from repro.serving.energy import EnergyMeter, SimClock
 
@@ -101,7 +102,8 @@ class ModelManager:
         instant."""
         m = self.models[model_id]
         m.loading = True
-        self.meter.transition("loading", power_override_w=m.loader.p_load_w)
+        self.meter.transition(PowerState.LOADING,
+                              power_override_w=m.loader.p_load_w)
         return m.loader.t_load_s
 
     def finish_load(self, model_id: str) -> None:
@@ -111,7 +113,7 @@ class ModelManager:
             m.engine = m.load_fn()
         m.loading = False
         m.resident = True
-        self.meter.transition("parked")
+        self.meter.transition(PowerState.CTX_IDLE)
 
     def _load(self, m: ManagedModel) -> None:
         self.begin_load(m.model_id)
@@ -125,8 +127,8 @@ class ModelManager:
         m.held = False
         # only fall to bare from parked: mid-load/mid-service the burst
         # power keeps metering until that phase closes
-        if not self._any_resident() and self.meter.state == "parked":
-            self.meter.transition("bare")
+        if not self._any_resident() and self.meter.state is PowerState.CTX_IDLE:
+            self.meter.transition(PowerState.BARE)
 
     def unload(self, model_id: str) -> bool:
         """Graceful unload hook (fleet migration): evict now, regardless
@@ -161,7 +163,7 @@ class ModelManager:
         m.resident = True
         if count_cold_start:
             m.cold_starts += 1
-        self.meter.transition("parked")
+        self.meter.transition(PowerState.CTX_IDLE)
         self.arm(model_id)
 
     def arm(self, model_id: str) -> None:
@@ -179,7 +181,8 @@ class ModelManager:
     def settle(self) -> None:
         """Close the current burst phase (load/serve): fall to parked or
         bare according to residency."""
-        self.meter.transition("parked" if self._any_resident() else "bare")
+        self.meter.transition(PowerState.CTX_IDLE if self._any_resident()
+                              else PowerState.BARE)
 
     def tick(self) -> None:
         """Apply due evictions at the current sim time."""
@@ -199,7 +202,9 @@ class ModelManager:
             m.evict_at = math.inf
             m.pins = 0
             m.held = False
-        self.meter.transition("bare")
+        # a failed device comes back up bare whatever it was doing
+        # (including asleep: SLEEP -> BARE is the legal wake edge)
+        self.meter.transition(PowerState.BARE)
 
     # -- request path --------------------------------------------------------
     def handle_request(self, model_id: str, *, service_s: float = 0.0,
@@ -223,11 +228,11 @@ class ModelManager:
         m.latency_samples.append(wait)
         result = None
         if work_fn is not None or service_s > 0:
-            self.meter.transition("active")
+            self.meter.transition(PowerState.ACTIVE)
             if work_fn is not None:
                 result = work_fn(m.engine)
             self.clock.advance(service_s)
-        self.meter.transition("parked")
+        self.meter.transition(PowerState.CTX_IDLE)
         self.arm(model_id)
         return result
 

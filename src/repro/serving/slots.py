@@ -17,6 +17,12 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
+#: Loader-channel sentinel: the device is running its SLEEP -> BARE wake
+#: ramp (core/power_states.py).  Wake serializes on the same channel as
+#: loads -- a gated device must finish waking before any weight ingest
+#: starts -- and the sentinel can never collide with a model_id.
+WAKE_CHANNEL = "__wake__"
+
 
 class SlotPool:
     """Fixed-size pool of reusable slot ids (lowest-free-first).

@@ -1,0 +1,396 @@
+"""Device power-state machine + sleep/wake gating (ISSUE 5).
+
+Four layers:
+  * machine unit tests -- transition-table completeness, illegal
+    transitions raise (in the machine, the meter, and the lifecycle
+    layer), per-state power formula.
+  * EnergyMeter accounting -- wake-energy bookkeeping, the totals()
+    flush contract vs the non-mutating peek_totals(), gated_wh_saved.
+  * hand-checked single-device gating end-to-end (every interval of the
+    timeline priced by hand to 1e-9 Wh).
+  * property/invariant suite -- gating never increases energy on an
+    empty device, a gated fleet stays under the always-on baseline,
+    the equivalence anchors survive with gating enabled-but-idle, and
+    the pinned 10x6 / seed-100 acceptance: gated total Wh strictly
+    below the best non-gated policy at p99 within the SLO budget.
+"""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, st
+
+from repro.core import (A100, H100, L40S, PROFILES, QWEN25_7B_MEASURED,
+                        traffic)
+from repro.core.power_states import (IllegalPowerTransition,
+                                     LEGAL_TRANSITIONS, PowerState,
+                                     PowerStateMachine, TransitionModel,
+                                     can_transition, gate_breakeven_s,
+                                     state_power_w, wake_penalty_j)
+from repro.core.scheduler import AlwaysOn, Breakeven, FixedTTL
+from repro.core.simulator import simulate
+from repro.fleet import (Consolidator, FleetModel, FleetModelSpec,
+                         FleetScenario, SLOAwareRouter, build_fleet,
+                         mixed_fleet_scenario, run_fleet,
+                         single_device_scenario, wake_cost_j)
+from repro.serving import EnergyMeter, ModelManager, RooflineServiceTime, \
+    SimClock
+
+GB = 1024 ** 3
+DAY = 24 * 3600.0
+
+
+# ---------------------------------------------------------------------------
+# the machine itself
+# ---------------------------------------------------------------------------
+
+def test_transition_table_complete_and_well_formed():
+    """Every state has a row, every target is a real state, self-loops
+    are implicit, and BARE is the hub: reachable FROM every state (so
+    any device can always be brought back to a safe floor) and the only
+    way INTO the gated states."""
+    assert set(LEGAL_TRANSITIONS) == set(PowerState)
+    for src, dsts in LEGAL_TRANSITIONS.items():
+        assert dsts <= set(PowerState)
+        assert src not in dsts                   # self-loops are implicit
+        assert can_transition(src, src)
+    for src in PowerState:
+        if src is not PowerState.BARE:
+            assert can_transition(src, PowerState.BARE) or \
+                PowerState.BARE in {
+                    d for d in LEGAL_TRANSITIONS[src]}, src
+    # the gated states only connect through BARE
+    for src in (PowerState.CTX_IDLE, PowerState.LOADING, PowerState.ACTIVE):
+        assert not can_transition(src, PowerState.SLEEP)
+        assert not can_transition(src, PowerState.OFF)
+
+
+def test_legacy_string_names_are_the_wire_format():
+    """The str-enum values are the historical meter/report keys, so the
+    typed refactor changes no bench rows or pinned dict keys."""
+    assert PowerState.CTX_IDLE.value == "parked"
+    assert PowerState.coerce("parked") is PowerState.CTX_IDLE
+    assert PowerState.BARE == "bare"             # str-enum equality
+    with pytest.raises(ValueError, match="unknown power state"):
+        PowerState.coerce("warm")
+
+
+def test_illegal_transitions_raise_and_do_not_mutate():
+    m = PowerStateMachine(PowerState.SLEEP, 0.0)
+    for bad in (PowerState.ACTIVE, PowerState.LOADING, PowerState.CTX_IDLE):
+        with pytest.raises(IllegalPowerTransition):
+            m.to(bad, 1.0)
+        assert m.state is PowerState.SLEEP       # unchanged on raise
+    assert m.to(PowerState.BARE, 2.0)            # the legal wake edge
+    assert m.entered_at_s == 2.0
+    with pytest.raises(IllegalPowerTransition):
+        PowerStateMachine(PowerState.OFF).to(PowerState.ACTIVE, 0.0)
+
+
+def test_self_loop_does_not_reset_entry_time():
+    """Re-settling into the current state keeps the state clock running
+    -- this is the bare-idle clock the gating ski rental measures."""
+    m = PowerStateMachine(PowerState.BARE, 10.0)
+    assert not m.to(PowerState.BARE, 50.0)
+    assert m.entered_at_s == 10.0
+    assert m.time_in_state_s(60.0) == 50.0
+
+
+def test_state_power_formula():
+    for prof in PROFILES.values():
+        assert state_power_w(prof, PowerState.OFF) == 0.0
+        assert 0.0 < state_power_w(prof, PowerState.SLEEP) \
+            < state_power_w(prof, PowerState.BARE) \
+            < state_power_w(prof, PowerState.CTX_IDLE) \
+            < state_power_w(prof, PowerState.ACTIVE)
+    # LOADING: loader-specific when a LoaderSpec applies, the SKU's own
+    # p_load_w otherwise (the field that replaced `p_base_w + 30.0`)
+    assert state_power_w(H100, "loading", QWEN25_7B_MEASURED) == \
+        QWEN25_7B_MEASURED.p_load_w
+    assert state_power_w(H100, "loading") == H100.p_load_w
+    assert H100.load_power_w() == H100.p_load_w == 124.1
+
+
+def test_gate_breakeven_is_device_level_ski_rental():
+    """T*_gate = (E_wake - P_base t_wake) / (P_base - P_sleep): at a
+    bare-idle gap of exactly T*_gate, sleeping and staying bare cost the
+    same; beyond it sleeping wins linearly."""
+    for prof in (H100, A100, L40S):
+        t_gate = gate_breakeven_s(prof)
+        tm = TransitionModel.for_profile(prof)
+        bare_j = prof.p_base_w * t_gate
+        sleep_j = tm.p_sleep_w * t_gate + tm.wake_extra_j(prof.p_base_w)
+        assert bare_j == pytest.approx(sleep_j, rel=1e-12)
+        assert 10.0 < t_gate < 120.0             # engineering-estimate band
+    # a profile whose sleep saves nothing never gates
+    import dataclasses
+    lazy = dataclasses.replace(H100, p_sleep_w=H100.p_base_w)
+    assert gate_breakeven_s(lazy) == math.inf
+
+
+def test_wake_penalty_prices_ramp_plus_hold():
+    dev = build_fleet("h100")[0]
+    tm = TransitionModel.for_profile(H100)
+    assert wake_cost_j(dev, 0.0) == pytest.approx(
+        tm.wake_energy_j - tm.p_sleep_w * tm.wake_s)
+    assert wake_cost_j(dev, 600.0) - wake_cost_j(dev, 0.0) == pytest.approx(
+        (H100.p_base_w - H100.p_sleep_w) * 600.0)
+    assert wake_penalty_j(H100, 60.0) == wake_cost_j(dev, 60.0)
+
+
+# ---------------------------------------------------------------------------
+# EnergyMeter on the machine
+# ---------------------------------------------------------------------------
+
+def test_meter_rejects_illegal_transitions():
+    clk = SimClock()
+    m = EnergyMeter(H100, clk)
+    m.gate()                                     # bare -> sleep is legal
+    clk.advance(100.0)
+    with pytest.raises(IllegalPowerTransition):
+        m.transition("active")                   # serve while gated
+    with pytest.raises(IllegalPowerTransition):
+        m.transition(PowerState.LOADING)         # load while gated
+    # nothing was charged by the failed transitions
+    assert m.peek_totals()["sleep"] == pytest.approx(
+        H100.p_sleep_w * 100.0 / 3600.0)
+    # gating is only legal from SETTLED bare: mid-wake (bare with the
+    # ramp's composed override) must refuse
+    m.begin_wake()
+    with pytest.raises(IllegalPowerTransition):
+        m.gate()                                 # mid-wake (override set)
+
+
+def test_lifecycle_layer_raises_on_gated_device():
+    """ModelManager.begin_load on a sleeping device raises through the
+    machine instead of silently metering load watts below the floor."""
+    mm = ModelManager(H100, clock=SimClock())
+    mm.register("m", policy=AlwaysOn(), loader=QWEN25_7B_MEASURED)
+    mm.meter.gate()
+    with pytest.raises(IllegalPowerTransition):
+        mm.begin_load("m")
+
+
+def test_meter_wake_energy_accounting():
+    """gate -> sleep S seconds -> wake: the sleep bucket meters the
+    floor, the wake ramp meters exactly wake_energy_j (as 'bare' at the
+    ramp's mean power), and gated_wh_saved is the hand formula."""
+    clk = SimClock()
+    m = EnergyMeter(H100, clk)
+    clk.advance(50.0)                            # 50 s bare
+    m.gate()
+    clk.advance(1000.0)                          # 1000 s asleep
+    dt = m.begin_wake()
+    assert dt == H100.wake_latency_s
+    clk.advance(dt)
+    m.finish_wake()
+    wh = m.totals()
+    assert wh["sleep"] == pytest.approx(H100.p_sleep_w * 1000.0 / 3600.0)
+    # bare = 50 s plain + the ramp's wake_energy_j
+    assert wh["bare"] == pytest.approx(
+        (H100.p_base_w * 50.0 + H100.wake_energy_j) / 3600.0)
+    assert m.wakes == 1
+    tm = TransitionModel.for_profile(H100)
+    expect_saved = ((H100.p_base_w - H100.p_sleep_w) * 1000.0
+                    - tm.wake_extra_j(H100.p_base_w)) / 3600.0
+    assert m.gated_wh_saved() == pytest.approx(expect_saved)
+
+
+def test_sleep_wake_round_trip_conserves_energy_at_breakeven():
+    """A gap of exactly T*_gate costs the same slept as bare (the ski
+    rental's indifference point); a longer gap is strictly cheaper
+    slept, a shorter one strictly dearer."""
+    t_gate = gate_breakeven_s(H100)
+
+    def cycle_wh(gap_s: float, gated: bool) -> float:
+        clk = SimClock()
+        m = EnergyMeter(H100, clk)
+        if gated:
+            m.gate()
+            clk.advance(gap_s)
+            clk.advance(m.begin_wake())
+            m.finish_wake()
+        else:
+            clk.advance(gap_s + H100.wake_latency_s)
+        return m.totals()["total"]
+
+    assert cycle_wh(t_gate, True) == pytest.approx(cycle_wh(t_gate, False),
+                                                   abs=1e-9)
+    assert cycle_wh(4 * t_gate, True) < cycle_wh(4 * t_gate, False)
+    assert cycle_wh(t_gate / 4, True) > cycle_wh(t_gate / 4, False)
+
+
+def test_totals_flush_contract_and_peek():
+    """totals() flushes (documented mutation) but is double-call safe
+    and preserves state + override; peek_totals() is a pure read."""
+    clk = SimClock()
+    m = EnergyMeter(H100, clk)
+    clk.advance(3600.0)
+    first = m.totals()
+    n_timeline = len(m.timeline)
+    again = m.totals()                           # same instant: no drift
+    assert again == first
+    assert len(m.timeline) == n_timeline         # zero-width not appended
+    clk.advance(1800.0)
+    peek = m.peek_totals()
+    assert peek["bare"] == pytest.approx(H100.p_base_w * 1.5 / 3600.0 * 3600)
+    assert len(m.timeline) == n_timeline         # peek did not flush
+    assert m.peek_totals() == peek               # idempotent
+    assert m.totals()["bare"] == pytest.approx(peek["bare"])
+    # flush mid-burst preserves the composed override
+    m.transition("parked")
+    m.transition("active", power_override_w=500.0)
+    clk.advance(10.0)
+    m.totals()
+    assert m.power_override_w == 500.0
+    clk.advance(10.0)
+    assert m.totals()["active"] == pytest.approx(500.0 * 20.0 / 3600.0)
+
+
+# ---------------------------------------------------------------------------
+# hand-checked single-device gating end-to-end
+# ---------------------------------------------------------------------------
+
+def test_single_device_gating_timeline_by_hand():
+    """One model, TTL 60 s, one arrival at t=5000 into a 7200 s horizon
+    with a 100 s gating tick: prewarm -> evict(60) -> gate(100) ->
+    sleep -> wake+reload at the arrival -> evict(5100) -> gate(5200) ->
+    sleep to the horizon.  Every interval priced by hand."""
+    devices = build_fleet("h100")
+    spec = FleetModelSpec("m", lambda: FixedTTL(60.0),
+                          loader=QWEN25_7B_MEASURED, vram_gb=10.0,
+                          home="h100-0")
+    sc = FleetScenario(
+        devices=devices, models=[FleetModel(spec, [5000.0])],
+        horizon_s=7200.0,
+        consolidator=Consolidator(period_s=100.0,
+                                  gate_drained_devices=True))
+    res = run_fleet(sc)
+    ld = QWEN25_7B_MEASURED
+    expected = (H100.p_ctx_w * 60.0              # prewarmed, TTL armed
+                + H100.p_base_w * 40.0           # bare until the 100 s tick
+                + H100.p_sleep_w * 4900.0        # gated through the lull
+                + H100.wake_energy_j             # wake ramp at t=5000
+                + ld.p_load_w * ld.t_load_s      # reload
+                + H100.p_ctx_w * 60.0            # parked until TTL
+                + H100.p_base_w * 100.0          # bare until the 5200 tick
+                + H100.p_sleep_w * 2000.0        # gated to the horizon
+                ) / 3600.0
+    assert res.energy_wh == pytest.approx(expected, abs=1e-9)
+    assert res.gates == 2 and res.wakes == 1
+    assert res.cold_starts == 2                  # prewarm + the reload
+    # the request waited the wake ramp plus its own load
+    assert res.added_latency_s_total == pytest.approx(
+        H100.wake_latency_s + ld.t_load_s, abs=1e-9)
+    assert res.state_durations_s["sleep"] == pytest.approx(6900.0)
+    by_state = res.state_energy_wh
+    assert sum(by_state.values()) == pytest.approx(res.energy_wh, rel=1e-12)
+    tm = TransitionModel.for_profile(H100)
+    assert res.gated_wh_saved == pytest.approx(
+        ((H100.p_base_w - H100.p_sleep_w) * 6900.0
+         - tm.wake_extra_j(H100.p_base_w)) / 3600.0, abs=1e-9)
+    assert res.devices[0].meter_state == "sleep"
+
+
+# ---------------------------------------------------------------------------
+# invariants (property suite)
+# ---------------------------------------------------------------------------
+
+def _gated_consolidator() -> Consolidator:
+    return Consolidator(period_s=300.0, gate_drained_devices=True)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_gating_never_increases_energy_on_an_empty_device(seed):
+    """An extra device nobody routes to costs at most its bare-idle
+    floor without gating; WITH gating it costs strictly less (it sleeps
+    out the horizon), and the served workload's joules are untouched."""
+    arr = traffic.PATTERNS["diurnal"](seed=seed)
+    arr = arr[arr < 6 * 3600.0]
+    devices = build_fleet("h100+a100")
+
+    def scenario(consolidator):
+        spec = FleetModelSpec("m", AlwaysOn, checkpoint_bytes=8 * GB,
+                              vram_gb=9.0, home="h100-0")
+        return FleetScenario(devices=build_fleet("h100+a100"),
+                             models=[FleetModel(spec, arr)],
+                             horizon_s=6 * 3600.0,
+                             consolidator=consolidator)
+
+    plain = run_fleet(scenario(None))
+    gated = run_fleet(scenario(_gated_consolidator()))
+    stranger = {d.instance_id: d for d in gated.devices}["a100-0"]
+    assert gated.energy_wh <= plain.energy_wh + 1e-9
+    assert stranger.wakes == 0
+    assert stranger.durations_s.get("sleep", 0.0) > 0.0
+    assert gated.gated_wh_saved > 0.0
+    assert gated.energy_wh == pytest.approx(
+        plain.energy_wh - gated.gated_wh_saved, abs=1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_gated_fleet_never_exceeds_always_on(seed):
+    """Gated breakeven scheduling stays under the always-on
+    warm-everywhere baseline: gating only removes standing power, and
+    every wake it buys is priced against that saving."""
+    kw = dict(n_models=3, fleet="h100+a100+l40s", horizon_s=6 * 3600.0,
+              seed=seed)
+    base = run_fleet(mixed_fleet_scenario(AlwaysOn, "warm-first", **kw))
+    gated = run_fleet(mixed_fleet_scenario(
+        Breakeven, "energy-greedy", consolidate=_gated_consolidator(),
+        **kw))
+    assert gated.energy_wh <= base.energy_wh + 1e-9
+    assert gated.requests == base.requests
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_equivalence_anchor_survives_gating_enabled_but_idle(seed):
+    """1 device x 1 model with an always-on policy never drains, so a
+    gating-enabled consolidator never fires and run_fleet still
+    reproduces core/simulator.py to 1e-6 Wh -- the anchor contract for
+    the new layer (the path switched on but fed degenerate inputs must
+    equal the old path exactly)."""
+    arr = traffic.PATTERNS["bursty"](seed=seed)
+    sim = simulate(arr, AlwaysOn(), H100, QWEN25_7B_MEASURED)
+    sc = single_device_scenario(arr, AlwaysOn, QWEN25_7B_MEASURED, "h100")
+    sc.consolidator = _gated_consolidator()
+    res = run_fleet(sc)
+    assert res.energy_wh == pytest.approx(sim.energy_wh, abs=1e-6)
+    assert res.cold_starts == sim.cold_starts
+    assert res.gates == 0 and res.wakes == 0
+    assert res.gated_wh_saved == 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the pinned 10x6 day
+# ---------------------------------------------------------------------------
+
+def test_gating_opens_the_bare_idle_floor_pinned_day():
+    """Acceptance (ISSUE 5): on the 10-model x 6-GPU day (seed 100) with
+    roofline service times, SLO-aware routing + a gating consolidator
+    lands total Wh STRICTLY below the best non-gated policy -- below
+    even the non-gated clairvoyant bound, because gating is the first
+    mechanism that cuts under p_base -- while holding p99 inside the
+    90 s budget.  (Measured: 4240 vs 8430 Wh, p99 83.0 s, 127 gates /
+    122 wakes, ~4235 Wh recovered from the bare-idle floor.)"""
+    svc = RooflineServiceTime()
+    kw = dict(service_model=svc, seed=100)
+    best_nongated = run_fleet(mixed_fleet_scenario(
+        Breakeven, "energy-greedy", consolidate=True, **kw))
+    gated = run_fleet(mixed_fleet_scenario(
+        Breakeven, SLOAwareRouter(90.0),
+        consolidate=_gated_consolidator(), **kw))
+    assert gated.energy_wh < best_nongated.energy_wh
+    assert gated.p99_added_latency_s <= 90.0
+    assert gated.energy_wh < best_nongated.lb_shared_wh   # below the floor
+    assert gated.gates > 0 and gated.wakes > 0
+    assert gated.gated_wh_saved > 1000.0
+    # measured band, pinned loosely enough to survive float churn
+    assert 0.40 <= gated.energy_wh / best_nongated.energy_wh <= 0.65
+    assert gated.state_durations_s["sleep"] > 50 * 3600.0

@@ -1,13 +1,16 @@
 #!/usr/bin/env python
 """Docs gate (CI `docs` job): markdown links resolve, python blocks run.
 
-Two checks over README.md and every markdown file under docs/:
+Three checks over README.md and every markdown file under docs/:
 
   1. every RELATIVE markdown link/image target exists on disk
      (external http(s)/mailto links and pure #anchors are skipped);
   2. every fenced ```python code block executes successfully under
      PYTHONPATH=src (each block in its own interpreter, repo root as
-     cwd) -- so the documented examples cannot rot.
+     cwd) -- so the documented examples cannot rot;
+  3. every page under docs/ is LINKED from at least one other scanned
+     page -- a new docs page (e.g. docs/POWER.md) cannot land as an
+     orphan that readers never find.
 
 Blocks that are intentionally non-executable should use a different
 fence language (```text, ```console, or bare ```).
@@ -52,7 +55,10 @@ def strip_code(text: str) -> str:
     return "\n".join(out)
 
 
-def check_links(path: str, text: str) -> list:
+def check_links(path: str, text: str, resolved_out: set = None) -> list:
+    """Broken-relative-link errors; existing CROSS-page targets are
+    added to ``resolved_out`` (absolute paths) for the orphan-page
+    check -- a page linking to itself does not count as linked."""
     errors = []
     for target in _LINK.findall(strip_code(text)):
         if re.match(r"^[a-z][a-z0-9+.-]*:", target) or target.startswith("#"):
@@ -64,6 +70,22 @@ def check_links(path: str, text: str) -> list:
         if not os.path.exists(resolved):
             errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
                           f"-> {target}")
+        elif resolved_out is not None \
+                and os.path.abspath(resolved) != os.path.abspath(path):
+            resolved_out.add(os.path.abspath(resolved))
+    return errors
+
+
+def check_orphans(files: list, linked: set) -> list:
+    """Every docs/ page must be linked from some other scanned page."""
+    errors = []
+    for path in files:
+        if os.path.basename(path) == "README.md":
+            continue                       # the root is the entry point
+        if os.path.abspath(path) not in linked:
+            errors.append(f"{os.path.relpath(path, ROOT)}: orphan docs "
+                          f"page (not linked from README.md or any "
+                          f"other docs page)")
     return errors
 
 
@@ -107,22 +129,25 @@ def run_block(path: str, idx: int, code: str) -> list:
 def main() -> int:
     errors = []
     n_blocks = 0
-    for path in doc_files():
+    files = doc_files()
+    linked: set = set()
+    for path in files:
         with open(path, encoding="utf-8") as f:
             text = f.read()
-        errors.extend(check_links(path, text))
+        errors.extend(check_links(path, text, linked))
         for i, code in enumerate(python_blocks(text), 1):
             n_blocks += 1
             print(f"running {os.path.relpath(path, ROOT)} "
                   f"python block #{i} ...", flush=True)
             errors.extend(run_block(path, i, code))
+    errors.extend(check_orphans(files, linked))
     if errors:
         print(f"\nFAIL: {len(errors)} docs problem(s)\n")
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"\nOK: {len(doc_files())} files, all links resolve, "
-          f"{n_blocks} python blocks ran clean")
+    print(f"\nOK: {len(files)} files, all links resolve and no page "
+          f"is orphaned, {n_blocks} python blocks ran clean")
     return 0
 
 
