@@ -13,12 +13,14 @@ from __future__ import annotations
 import sys
 
 import math
+import time
 
 from benchmarks.common import emit
 from repro.core.scheduler import AlwaysOn, Breakeven
 from repro.fleet import (CarbonAwareRouter, CarbonBreakeven, Consolidator,
                          MIXES, ReplicaAutoscaler, SLOAwareRouter,
-                         mixed_fleet_scenario, run_fleet, trace_for_zone)
+                         flash_crowd, mixed_fleet_scenario, run_fleet,
+                         run_mega, trace_for_zone)
 from repro.serving import RooflineServiceTime
 
 SLO_BUDGET_S = 90.0
@@ -210,14 +212,82 @@ def run_all(fast: bool = False, seed: int = SEED) -> None:
         emit(f"{tag}.gating.state.{state}.wh",
              f"{gated.state_energy_wh.get(state, 0.0):.1f}")
 
-    print(f"   {'clairvoyant shared-context bound':38s}"
-          f" {base.lb_shared_wh:9.1f} {100 * (1 - base.lb_shared_wh / base.energy_wh):6.1f}")
+    print(f"   {'clairvoyant non-gated bound':38s}"
+          f" {base.lb_nongated_wh:9.1f} {100 * (1 - base.lb_nongated_wh / base.energy_wh):6.1f}")
     print(f"   {'per-model clairvoyant (no sharing)':38s}"
           f" {base.cv_per_model_wh:9.1f}")
-    emit(f"{tag}.clairvoyant_lb.wh", f"{base.lb_shared_wh:.1f}")
+    emit(f"{tag}.clairvoyant_lb.wh", f"{base.lb_nongated_wh:.1f}")
     print(f"   infra {base.infra_usd:.0f} USD/day (on-demand), baseline "
           f"energy {base.energy_usd:.2f} USD, {base.carbon_kg:.1f} kgCO2e "
           f"(USA mix; catalog estimates)")
+
+    _run_mega_bench(fast, seed, tag, kw)
+
+
+def _run_mega_bench(fast: bool, seed: int, tag: str, kw: dict) -> None:
+    """`{tag}.mega.*`: the vectorized simulator's wall-clock story.
+
+    Three legs: (1) speedup vs the event loop on the pinned anchor day
+    (same physics, anchored bit-exact in tests/test_mega.py, so the row
+    is pure wall-clock); (2) a device-count sweep on generated
+    flash-crowd days; (3) full mode only, the ISSUE acceptance -- a
+    ~600-device, >1M-request synthetic day, which must complete in
+    under 30 s."""
+    print("   -- mega: vectorized simulator (trace replay at scale) --")
+    sc_kw = {k: v for k, v in kw.items() if k != "seed"}
+    t0 = time.perf_counter()
+    ref = run_fleet(mixed_fleet_scenario(Breakeven, "warm-first",
+                                         seed=seed, **sc_kw))
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    got = run_mega(mixed_fleet_scenario(Breakeven, "warm-first",
+                                        seed=seed, **sc_kw))
+    t_mega = time.perf_counter() - t0
+    speedup = t_ref / t_mega if t_mega > 0 else float("inf")
+    n0 = len(got.devices)
+    print(f"   anchor day (n={n0}): event loop {t_ref:.2f} s, mega "
+          f"{t_mega:.3f} s => {speedup:.1f}x at {got.energy_wh:.1f} Wh "
+          f"(= event loop's {ref.energy_wh:.1f})")
+    emit(f"{tag}.mega.speedup.n{n0}", f"{speedup:.1f}")
+    emit(f"{tag}.mega.wall_s.n{n0}", f"{t_mega:.3f}", us=t_mega * 1e6)
+    emit(f"{tag}.mega.wh.n{n0}", f"{got.energy_wh:.1f}")
+
+    # device-count sweep: generated flash-crowd days, scaled traffic
+    sweep = ((6, "2xh100+2xa100+2xl40s", 24),
+             (60, "20xh100+20xa100+20xl40s", 80)) if fast else \
+            ((6, "2xh100+2xa100+2xl40s", 24),
+             (60, "20xh100+20xa100+20xl40s", 80),
+             (600, "200xh100+200xa100+200xl40s", 600))
+    horizon = 6 * 3600.0 if fast else 24 * 3600.0
+    for n_dev, fleet, n_routes in sweep:
+        trace = flash_crowd(n_routes=n_routes, fleet=fleet, seed=seed,
+                            horizon_s=horizon, base_rate_hr=40.0)
+        t0 = time.perf_counter()
+        res = run_mega(trace.to_scenario(Breakeven), compute_bound=False)
+        wall = time.perf_counter() - t0
+        rate = res.requests / wall if wall > 0 else float("inf")
+        print(f"   flash-crowd n={n_dev:4d}: {res.requests:8d} requests, "
+              f"{res.energy_wh:11.1f} Wh, wall {wall:6.2f} s "
+              f"({rate:,.0f} req/s simulated)")
+        emit(f"{tag}.mega.wall_s.n{n_dev}", f"{wall:.3f}", us=wall * 1e6)
+        emit(f"{tag}.mega.wh.n{n_dev}", f"{res.energy_wh:.1f}")
+        emit(f"{tag}.mega.requests.n{n_dev}", str(res.requests))
+
+    if not fast:
+        # the ISSUE 6 acceptance row: >=1M-request day, <30 s wall
+        trace = flash_crowd(n_routes=600,
+                            fleet="200xh100+200xa100+200xl40s",
+                            seed=seed, base_rate_hr=130.0, spike_x=60.0)
+        t0 = time.perf_counter()
+        res = run_mega(trace.to_scenario(Breakeven), compute_bound=False)
+        wall = time.perf_counter() - t0
+        print(f"   mega day: {res.requests:,} requests on "
+              f"{len(res.devices)} devices in {wall:.1f} s "
+              f"({res.energy_wh / 1e3:.1f} kWh, "
+              f"{res.cold_starts} cold starts)")
+        emit(f"{tag}.mega.megaday.requests", str(res.requests))
+        emit(f"{tag}.mega.megaday.wall_s", f"{wall:.2f}", us=wall * 1e6)
+        emit(f"{tag}.mega.megaday.wh", f"{res.energy_wh:.1f}")
 
 
 if __name__ == "__main__":

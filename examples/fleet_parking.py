@@ -68,9 +68,9 @@ def main() -> None:
         if base is res:
             print(f"{'':48s}   per-device: " + ", ".join(
                 f"{d.instance_id} {d.total_wh:.0f} Wh" for d in res.devices))
-    print(f"{'clairvoyant shared-context lower bound':48s} "
-          f"{base.lb_shared_wh:9.1f} Wh "
-          f"({100 * (1 - base.lb_shared_wh / base.energy_wh):5.1f}%)")
+    print(f"{'clairvoyant non-gated lower bound':48s} "
+          f"{base.lb_nongated_wh:9.1f} Wh "
+          f"({100 * (1 - base.lb_nongated_wh / base.energy_wh):5.1f}%)")
     print(f"\nfleet rental {base.infra_usd:.0f} USD/day on-demand; "
           f"always-on energy {base.energy_usd:.2f} USD/day, "
           f"{base.carbon_kg:.1f} kgCO2e/day (USA grid; catalog estimates)")
@@ -173,8 +173,8 @@ def main() -> None:
           f"device-hours asleep; {gated.gated_wh_saved:.0f} Wh recovered "
           f"from the bare-idle floor -- "
           f"{100 * gated.savings_vs(best_nongated):.0f}% below the best "
-          f"non-gated policy (and below its clairvoyant bound "
-          f"{best_nongated.lb_shared_wh:.0f} Wh, which assumed devices "
+          f"non-gated policy (and below its non-gated clairvoyant bound "
+          f"{best_nongated.lb_nongated_wh:.0f} Wh, which assumed devices "
           f"never sleep)")
 
 

@@ -21,6 +21,9 @@ from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
                                   FleetScenario, clairvoyant_bound,
                                   mixed_fleet_scenario, run_fleet,
                                   single_device_scenario)
+from repro.fleet.mega import (FleetTrace, GENERATORS, MegaUnsupportedError,
+                              RouteTrace, flash_crowd, product_launch,
+                              regional_outage, run_mega, trace_from_records)
 
 __all__ = [
     "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
@@ -37,4 +40,7 @@ __all__ = [
     "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
     "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
     "clairvoyant_bound",
+    "MegaUnsupportedError", "run_mega", "GENERATORS", "FleetTrace",
+    "RouteTrace", "flash_crowd", "product_launch", "regional_outage",
+    "trace_from_records",
 ]

@@ -1,0 +1,31 @@
+"""Vectorized mega-fleet simulation + production trace replay.
+
+`megasim.run_mega` is an array-program re-expression of
+`fleet.fleetsim.run_fleet` for the warm-first / no-controller scope,
+anchored against the event loop on the pinned 10-model x 6-GPU day and
+fast enough for 500+-device multi-million-request days.  `traces`
+supplies the telemetry-shaped ingestion schema (`FleetTrace`) and the
+synthetic production-day generators that feed it.  See docs/SCALE.md.
+"""
+from repro.fleet.mega.megasim import MegaUnsupportedError, run_mega
+from repro.fleet.mega.traces import (
+    GENERATORS,
+    FleetTrace,
+    RouteTrace,
+    flash_crowd,
+    product_launch,
+    regional_outage,
+    trace_from_records,
+)
+
+__all__ = [
+    "MegaUnsupportedError",
+    "run_mega",
+    "GENERATORS",
+    "FleetTrace",
+    "RouteTrace",
+    "flash_crowd",
+    "product_launch",
+    "regional_outage",
+    "trace_from_records",
+]

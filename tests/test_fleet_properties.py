@@ -104,16 +104,19 @@ def test_all_energies_nonnegative(seed, policy):
 
 @given(st.integers(0, 10_000))
 @settings(max_examples=10, deadline=None)
-def test_clairvoyant_bound_floors_every_router(seed):
-    """The offline lower bound never exceeds ANY online policy's energy
-    -- autoscaled routers included (held replicas only ADD warm time)."""
+def test_nongated_clairvoyant_bound_floors_every_router(seed):
+    """The offline NON-GATED lower bound (``lb_nongated_wh``) never
+    exceeds any non-gated online policy's energy -- autoscaled routers
+    included (held replicas only ADD warm time).  These scenarios run no
+    gating consolidator, so the scoped floor applies; a gated run is
+    explicitly allowed to land below it (test_power_states pins that)."""
     for router in ROUTERS:
         for scaler in (None, ReplicaAutoscaler()):
             res = run_fleet(_scenario(seed, router=router,
                                       autoscaler=scaler))
-            assert res.energy_wh >= res.lb_shared_wh - 1e-6, \
+            assert res.energy_wh >= res.lb_nongated_wh - 1e-6, \
                 (router, scaler is not None)
-            assert res.cv_per_model_wh >= res.lb_shared_wh - 1e-9
+            assert res.cv_per_model_wh >= res.lb_nongated_wh - 1e-9
 
 
 @given(st.integers(0, 10_000), st.sampled_from(ROUTERS))
@@ -396,3 +399,57 @@ def test_held_replica_survives_lull_then_policy_replica_evicts():
     # wait: strictly less total added latency, strictly smaller max
     assert auto.added_latency_s_total < plain.added_latency_s_total
     assert max(auto.latencies_s) < max(plain.latencies_s)
+
+
+# ---------------------------------------------------------------------------
+# synthetic-day trace generator invariants (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+from repro.fleet import flash_crowd, product_launch, regional_outage  # noqa: E402
+
+_GENERATORS = {"flash-crowd": flash_crowd, "product-launch": product_launch,
+               "regional-outage": regional_outage}
+
+
+@given(st.integers(0, 10_000), st.sampled_from(sorted(_GENERATORS)))
+@settings(max_examples=9, deadline=None)
+def test_generated_traces_well_formed(seed, gen_name):
+    """Invariant: every synthetic day is a valid arrival trace -- sorted,
+    non-negative, strictly inside the horizon, with positive checkpoint
+    footprints -- for any seed."""
+    tr = _GENERATORS[gen_name](seed=seed, n_routes=4, horizon_s=6 * HOUR)
+    assert len(tr.routes) == 4
+    assert len({r.route_id for r in tr.routes}) == 4
+    for r in tr.routes:
+        a = r.arrivals_s
+        assert np.all(np.diff(a) >= 0.0)
+        assert a.size == 0 or (a[0] >= 0.0 and a[-1] < tr.horizon_s)
+        assert r.checkpoint_gb > 0.0
+    assert tr.requests == sum(r.requests for r in tr.routes)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=9, deadline=None)
+def test_regional_outage_window_is_dark(seed):
+    """Invariant: during the outage, NO route sees a single arrival --
+    the upstream region is gone, not merely degraded."""
+    t0 = 2 * HOUR
+    tr = regional_outage(seed=seed, n_routes=4, horizon_s=6 * HOUR,
+                         outage_start_s=t0, outage_s=HOUR)
+    assert tr.requests > 0
+    for r in tr.routes:
+        a = r.arrivals_s
+        assert not np.any((a >= t0) & (a < t0 + HOUR))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=9, deadline=None)
+def test_product_launch_route_silent_before_launch(seed):
+    """Invariant: the launching route has EXACTLY zero arrivals before
+    the launch instant (the model is not public yet), and -- it being a
+    launch -- some traffic after it."""
+    tr = product_launch(seed=seed, n_routes=4, horizon_s=8 * HOUR,
+                        launch_s=3 * HOUR)
+    launch = tr.routes[0].arrivals_s
+    assert not np.any(launch < 3 * HOUR)
+    assert launch.size > 0

@@ -388,7 +388,9 @@ def test_gating_opens_the_bare_idle_floor_pinned_day():
         consolidate=_gated_consolidator(), **kw))
     assert gated.energy_wh < best_nongated.energy_wh
     assert gated.p99_added_latency_s <= 90.0
-    assert gated.energy_wh < best_nongated.lb_shared_wh   # below the floor
+    # below even the NON-GATED clairvoyant floor (which is exactly why
+    # the field is scoped: gating is allowed to undercut it)
+    assert gated.energy_wh < best_nongated.lb_nongated_wh
     assert gated.gates > 0 and gated.wakes > 0
     assert gated.gated_wh_saved > 1000.0
     # measured band, pinned loosely enough to survive float churn
