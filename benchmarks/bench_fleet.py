@@ -222,6 +222,7 @@ def run_all(fast: bool = False, seed: int = SEED) -> None:
           f"(USA mix; catalog estimates)")
 
     _run_mega_bench(fast, seed, tag, kw)
+    _run_megax_bench(fast, seed, tag)
 
 
 def _run_mega_bench(fast: bool, seed: int, tag: str, kw: dict) -> None:
@@ -288,6 +289,85 @@ def _run_mega_bench(fast: bool, seed: int, tag: str, kw: dict) -> None:
         emit(f"{tag}.mega.megaday.requests", str(res.requests))
         emit(f"{tag}.mega.megaday.wall_s", f"{wall:.2f}", us=wall * 1e6)
         emit(f"{tag}.mega.megaday.wh", f"{res.energy_wh:.1f}")
+
+
+def _run_megax_bench(fast: bool, seed: int, tag: str) -> None:
+    """`{tag}.megax.*`: the compiled (jax) bulk-scan backend vs numpy.
+
+    Both backends drive the identical structural event loop (totals
+    anchored to <=1e-9 in tests/test_mega.py), so the rows isolate the
+    BULK-SCAN phases -- big-gap scans, deferred billing, energy
+    segment-sums, and the carbon trapezoid integral -- which is where
+    the jit-compiled array programs (and the segment_trapz kernel) do
+    their work.  Benched on a solar-duck carbon trace: time-varying
+    intensity is the paper's carbon-aware setting, and it is exactly
+    where the numpy path pays a per-segment Python integral.  The
+    sweep leg shows compile amortization: every compiled program is
+    shared across same-shaped points, so point 1 is compile-bound and
+    the rest run hot."""
+    from repro.fleet import make_trace
+    from repro.fleet.mega import run_mega_sweep
+
+    print("   -- megax: compiled (jax) bulk-scan backend --")
+    ct = make_trace("solar-duck", 0.39)
+    if fast:
+        trace = flash_crowd(n_routes=24, fleet="2xh100+2xa100+2xl40s",
+                            seed=seed, horizon_s=6 * 3600.0,
+                            base_rate_hr=40.0)
+    else:
+        # the mega-day acceptance trace: ~600 devices, >1M requests
+        trace = flash_crowd(n_routes=600,
+                            fleet="200xh100+200xa100+200xl40s",
+                            seed=seed, base_rate_hr=130.0, spike_x=60.0)
+    # first jax run pays the jit compiles; time the warm steady state
+    run_mega(trace.to_scenario(Breakeven, carbon_trace=ct),
+             compute_bound=False, backend="jax")
+    runs = {}
+    for backend in ("numpy", "jax"):
+        sc = trace.to_scenario(Breakeven, carbon_trace=ct)
+        t0 = time.perf_counter()
+        res = run_mega(sc, compute_bound=False, backend=backend)
+        runs[backend] = (time.perf_counter() - t0, res)
+    (w_np, r_np), (w_jx, r_jx) = runs["numpy"], runs["jax"]
+    b_np = r_np.phase_timings["bulk_scan_s"]
+    b_jx = r_jx.phase_timings["bulk_scan_s"]
+    speedup = b_np / b_jx if b_jx > 0 else float("inf")
+    drift = abs(r_jx.energy_wh - r_np.energy_wh) / r_np.energy_wh
+    print(f"   bulk-scan ({r_np.requests:,} requests, "
+          f"{len(r_np.devices)} devices): numpy {b_np:.2f} s, jax "
+          f"{b_jx:.2f} s => {speedup:.1f}x (wall {w_np:.1f} vs "
+          f"{w_jx:.1f} s; energy drift {drift:.1e})")
+    for phase in ("biggap_s", "billing_s", "energy_s", "carbon_s"):
+        print(f"      {phase:10s} numpy {r_np.phase_timings[phase]:6.2f} s"
+              f"   jax {r_jx.phase_timings[phase]:6.2f} s")
+    emit(f"{tag}.megax.bulk_scan.numpy_s", f"{b_np:.3f}", us=b_np * 1e6)
+    emit(f"{tag}.megax.bulk_scan.jax_s", f"{b_jx:.3f}", us=b_jx * 1e6)
+    emit(f"{tag}.megax.bulk_scan.speedup", f"{speedup:.2f}")
+    emit(f"{tag}.megax.wall_s.numpy", f"{w_np:.2f}", us=w_np * 1e6)
+    emit(f"{tag}.megax.wall_s.jax", f"{w_jx:.2f}", us=w_jx * 1e6)
+    emit(f"{tag}.megax.carbon_s.numpy", f"{r_np.phase_timings['carbon_s']:.3f}")
+    emit(f"{tag}.megax.carbon_s.jax", f"{r_jx.phase_timings['carbon_s']:.3f}")
+
+    # vmapped sweep: one compiled trace-generation batch + shared bulk
+    # programs across every point
+    n_pts = 4 if fast else 24
+    skw = dict(n_routes=6, fleet="2xh100+2xa100+2xl40s", base_rate_hr=30.0,
+               horizon_s=6 * 3600.0 if fast else 24 * 3600.0,
+               scenario_kw=dict(carbon_trace=ct))
+    t0 = time.perf_counter()
+    results = run_mega_sweep(seeds=range(n_pts), **skw)
+    wall = time.perf_counter() - t0
+    bulks = [r.phase_timings["bulk_scan_s"] for r in results]
+    amort = bulks[0] / bulks[-1] if bulks[-1] > 0 else float("inf")
+    print(f"   sweep: {n_pts} points in {wall:.1f} s "
+          f"({n_pts / wall:.2f} pts/s); bulk-scan point 1 "
+          f"{bulks[0]:.2f} s (compile) -> point {n_pts} {bulks[-1]:.3f} s "
+          f"({amort:.0f}x amortized)")
+    emit(f"{tag}.megax.sweep.points", str(n_pts))
+    emit(f"{tag}.megax.sweep.wall_s", f"{wall:.2f}", us=wall * 1e6)
+    emit(f"{tag}.megax.sweep.points_per_s", f"{n_pts / wall:.2f}")
+    emit(f"{tag}.megax.sweep.first_bulk_s", f"{bulks[0]:.3f}")
+    emit(f"{tag}.megax.sweep.last_bulk_s", f"{bulks[-1]:.3f}")
 
 
 if __name__ == "__main__":

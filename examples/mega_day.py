@@ -17,13 +17,19 @@ First, though, the anchor that makes the speed trustworthy: on the
 pinned 10-model x 6-GPU day, run_mega reproduces run_fleet's joules
 bit-for-bit (tests/test_mega.py pins this; here we just print it).
 
-Run:  PYTHONPATH=src python examples/mega_day.py
+The closer repeats one day on the compiled backend
+(run_mega(backend="jax"), see docs/SCALE.md): same decisions, same
+joules, bulk arithmetic jit-compiled -- then sweeps a batch of seeded
+days through run_mega_sweep so the compiles amortize across points.
+
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python examples/mega_day.py
 """
 import time
 
 from repro.core.scheduler import Breakeven
-from repro.fleet import (flash_crowd, mixed_fleet_scenario, product_launch,
-                         regional_outage, run_fleet, run_mega)
+from repro.fleet import (flash_crowd, make_trace, mixed_fleet_scenario,
+                         product_launch, regional_outage, run_fleet,
+                         run_mega, run_mega_sweep)
 
 SEED = 100
 FLEET = "200xh100+200xa100+200xl40s"
@@ -63,6 +69,44 @@ def main() -> None:
 
     print("\n   (same physics as run_fleet -- the anchor above is the "
           "proof -- at ~50k simulated requests/second)")
+
+    # -- the compiled backend ------------------------------------------
+    # Price the flash-crowd day against a shaped carbon trace -- the
+    # setting where the numpy bulk path pays a per-segment Python
+    # integral and the jax backend's compiled programs (including the
+    # kernels/segment_trapz carbon kernel) earn their keep.
+    ct = make_trace("solar-duck", 0.39)
+    trace = flash_crowd(n_routes=600, fleet=FLEET, seed=SEED,
+                        base_rate_hr=130.0)
+    print("\n== compiled backend: flash-crowd day, solar-duck carbon ==")
+    results = {}
+    for backend in ("numpy", "jax"):
+        t0 = time.perf_counter()
+        res = run_mega(trace.to_scenario(Breakeven, carbon_trace=ct),
+                       compute_bound=False, backend=backend)
+        wall = time.perf_counter() - t0
+        bulk = sum(res.phase_timings.values())
+        results[backend] = res
+        print(f"   {backend:6s} {res.energy_wh / 1e3:8.1f} kWh"
+              f" {res.carbon_kg:8.1f} kgCO2e"
+              f"   bulk {bulk:5.1f} s   wall {wall:5.1f} s")
+    assert results["jax"].requests == results["numpy"].requests
+    assert abs(results["jax"].carbon_kg - results["numpy"].carbon_kg) \
+        <= 1e-9 * results["numpy"].carbon_kg
+
+    # -- sweep: compile once, run the batch hot ------------------------
+    n_pts = 8
+    t0 = time.perf_counter()
+    pts = run_mega_sweep(seeds=range(n_pts), generator="flash-crowd",
+                         n_routes=24, fleet="2xh100+2xa100+2xl40s",
+                         horizon_s=6 * 3600.0, base_rate_hr=40.0,
+                         scenario_kw=dict(carbon_trace=ct))
+    wall = time.perf_counter() - t0
+    taxes = [p.parking_tax_wh / 1e3 for p in pts]
+    print(f"\n== sweep: {n_pts} seeded 6 h days in {wall:.1f} s "
+          f"({n_pts / wall:.1f} pts/s) ==")
+    print(f"   parking tax {min(taxes):.2f}-{max(taxes):.2f} kWh per day"
+          f" (seed spread on one compiled program)")
 
 
 if __name__ == "__main__":

@@ -40,7 +40,16 @@ __all__ = [
     "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
     "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
     "clairvoyant_bound",
-    "MegaUnsupportedError", "run_mega", "GENERATORS", "FleetTrace",
-    "RouteTrace", "flash_crowd", "product_launch", "regional_outage",
-    "trace_from_records",
+    "MegaUnsupportedError", "run_mega", "run_mega_sweep", "GENERATORS",
+    "FleetTrace", "RouteTrace", "flash_crowd", "product_launch",
+    "regional_outage", "trace_from_records",
 ]
+
+
+def __getattr__(name):
+    # jax-backed sweep entry point, resolved lazily so the fleet package
+    # (and run_mega's numpy path) stays importable without jax
+    if name == "run_mega_sweep":
+        from repro.fleet.mega import jaxback
+        return jaxback.run_mega_sweep
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -220,6 +220,10 @@ class FleetResult:
     gates: int = 0
     wakes: int = 0
     gated_wh_saved: float = 0.0
+    # run_mega backend instrumentation: wall-clock seconds spent in the
+    # bulk-scan phases ("biggap_s" / "billing_s" / "energy_s" /
+    # "carbon_s" and their sum "bulk_scan_s"); None for event-loop runs
+    phase_timings: Optional[Dict[str, float]] = None
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or

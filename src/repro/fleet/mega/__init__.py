@@ -21,6 +21,8 @@ from repro.fleet.mega.traces import (
 __all__ = [
     "MegaUnsupportedError",
     "run_mega",
+    "run_mega_sweep",
+    "sweep_traces",
     "GENERATORS",
     "FleetTrace",
     "RouteTrace",
@@ -29,3 +31,15 @@ __all__ = [
     "regional_outage",
     "trace_from_records",
 ]
+
+_LAZY = {"run_mega_sweep", "sweep_traces"}
+
+
+def __getattr__(name):
+    # the sweep entry points live in jaxback, which imports jax -- keep
+    # the package importable (and run_mega's numpy path usable) without
+    # it by resolving these lazily (PEP 562)
+    if name in _LAZY:
+        from repro.fleet.mega import jaxback
+        return getattr(jaxback, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

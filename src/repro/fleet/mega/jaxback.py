@@ -1,0 +1,593 @@
+"""JAX-compiled bulk-scan backend for the mega-simulator, plus vmapped
+fleet sweeps (``run_mega(..., backend="jax")`` / ``run_mega_sweep``).
+
+``megasim.run_mega`` splits into a STRUCTURAL event loop (heap events:
+load completions, armed evictions -- inherently sequential, stays
+Python) and BULK phases that touch every request or metered segment.
+This module re-expresses the bulk phases as jit-compiled array
+programs behind the ``_NumpyBulk`` seam:
+
+  * **big-gap scans** -- instead of per-(stream, timeout)
+    ``np.flatnonzero(np.diff(arr) > T)`` + a ``searchsorted`` per run,
+    ``prepare`` stacks streams into padded static-shape matrices
+    (arrival lengths bucketed to powers of two so jit compiles once
+    per bucket, not once per stream) and one ``lax.cummin`` reverse
+    scan yields a ``nextbig`` table per (stream, T): the run ending at
+    pointer ``p`` is the O(1) lookup ``nextbig[p]``.
+  * **lazy-commit billing** -- waiter slices absorbed into mid-load
+    replicas are recorded as (stream, lo, hi, drain-time) references,
+    never materialized per element; ``finalize`` expands every record
+    in one ragged gather (``searchsorted`` over the record-start
+    prefix sums, indexed into the stacked stream arrays) and the wait
+    of each request is one vectorized subtract.
+  * **energy accounting** -- each power-state transition appends
+    ``(device*3 + state, dt, watts)``; per-(device, state) joules and
+    seconds are two ``jax.ops.segment_sum`` calls at finalize.
+  * **carbon integration** -- the power-timeline x ``CarbonTrace``
+    trapezoid integral runs through the ``kernels/segment_trapz``
+    Pallas kernel (jnp reference under interpret mode, see
+    ``kernels/ops.py``), with per-device attribution one segment-sum
+    away; the hourly cumulative timeline is the same prefix-integral
+    evaluated at bin boundaries under ``lax.map``.
+
+Everything is float64 (the fleet accounting convention) via the
+``jax.experimental.enable_x64`` scope, which is thread-local and does
+not disturb the f32 kernel tests elsewhere in the repo.  All array
+programs pad to power-of-two sizes with masked/zero-weight tails, so a
+sweep over many same-shaped days reuses every compiled program.
+
+Both backends drive the identical event loop and see identical calls,
+so requests/cold starts are equal and float totals (energy, carbon)
+agree to <=1e-9 relative -- pinned in ``tests/test_mega.py``.
+"""
+from __future__ import annotations
+
+import array
+import functools
+import itertools
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.fleet.carbon import CarbonTrace
+from repro.fleet.fleetsim import DAY, FleetResult
+from repro.fleet.mega import megasim
+from repro.fleet.mega.traces import FleetTrace, RouteTrace, _route_plan
+from repro.kernels import ops
+
+_J_PER_KWH = 3.6e6
+
+
+def _pow2(n: int, lo: int = 256) -> int:
+    """Smallest power of two >= max(n, 1), floored at ``lo`` -- the
+    padding quantum that keeps jit recompiles bounded (one compile per
+    bucket, reused across streams, runs, and sweep points)."""
+    return max(lo, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _pad(a: np.ndarray, n: int, value=0.0) -> np.ndarray:
+    if a.size >= n:
+        return a
+    return np.concatenate([a, np.full(n - a.size, value, dtype=a.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# Compiled bulk programs (shapes pre-padded by the callers below).
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _nextbig_rows(mat: jnp.ndarray, Ts: jnp.ndarray) -> jnp.ndarray:
+    """Per-row ``nextbig`` tables: ``out[r, p]`` = the smallest i >= p
+    with ``mat[r, i+1] - mat[r, i] > Ts[r]``, or a sentinel >= L when
+    no such gap remains.  Rows are arrival streams padded by repeating
+    their last arrival (gap 0: never "big"), so padding cannot end a
+    run early."""
+    gaps = mat[:, 1:] - mat[:, :-1]
+    L1 = gaps.shape[1]
+    idx = jnp.where(gaps > Ts[:, None],
+                    jnp.arange(L1, dtype=jnp.int32)[None, :],
+                    jnp.int32(L1))
+    return jax.lax.cummin(idx, axis=1, reverse=True)
+
+
+@functools.partial(jax.jit, static_argnames=("total_pad",))
+def _bill_gather(flat: jnp.ndarray, off: jnp.ndarray, sid: jnp.ndarray,
+                 lo: jnp.ndarray, hi: jnp.ndarray, t: jnp.ndarray, *,
+                 total_pad: int) -> jnp.ndarray:
+    """Expand ragged billing records into per-request waits.
+
+    Record r says: arrivals ``arr_sid[lo:hi]`` of stream ``sid`` were
+    served at drain time ``t`` (their wait is ``t - arrival``).  The
+    expansion is the classic ragged gather: output slot k belongs to
+    the record whose cumulative-count prefix contains k
+    (``searchsorted`` side='right' also steps over zero-length pad
+    records), and its arrival index is the offset within that record.
+    Slots past the real total hit pad records; callers slice them off.
+    """
+    cnt = hi - lo
+    starts = jnp.cumsum(cnt) - cnt
+    k = jnp.arange(total_pad, dtype=jnp.int32)
+    r = jnp.searchsorted(starts, k, side="right") - 1
+    r = jnp.clip(r, 0, sid.shape[0] - 1)
+    pos = off[sid[r]] + lo[r] + (k - starts[r])
+    pos = jnp.clip(pos, 0, flat.shape[0] - 1)
+    return t[r] - flat[pos]
+
+
+@functools.partial(jax.jit, static_argnames=("num",))
+def _energy_segsum(keys: jnp.ndarray, dt: jnp.ndarray, pw: jnp.ndarray, *,
+                   num: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(device, state) joules and seconds from the transition log
+    (keys = device*3 + state; pad rows carry dt = 0)."""
+    return (jax.ops.segment_sum(dt * pw, keys, num_segments=num),
+            jax.ops.segment_sum(dt, keys, num_segments=num))
+
+
+def _prefix_fn(kt: jnp.ndarray, kv: jnp.ndarray, cum: jnp.ndarray,
+               period: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """F(t) = integral of the periodic piecewise-linear intensity over
+    [0, t] from the extended knot tables (``CarbonTrace`` internals) --
+    the same closed form as ``kernels/ref.segment_trapz_ref``."""
+    total = cum[kt.shape[0] - 1]
+
+    def F(t):
+        k = jnp.floor(t / period)
+        p = t - k * period
+        j = jnp.clip(jnp.searchsorted(kt, p, side="right") - 1,
+                     0, kt.shape[0] - 2)
+        span = kt[j + 1] - kt[j]
+        dt = p - kt[j]
+        v_p = kv[j] + (kv[j + 1] - kv[j]) * dt / jnp.where(span > 0, span,
+                                                           1.0)
+        return k * total + cum[j] + dt * (kv[j] + v_p) * 0.5
+
+    return F
+
+
+@functools.partial(jax.jit, static_argnames=("period", "n_dev", "nb"))
+def _carbon_fused(a, b, w, dev, bucket, pseg, pk, pw, kt, kv, cum, tbr, *,
+                  period: float, n_dev: int, nb: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """kgCO2e per device AND the cumulative hourly timeline in one pass.
+
+    Per device: the segment_trapz kernel over every metered power
+    segment, attributed by one segment-sum (pad rows carry w = 0).
+
+    Timeline: the cumulative emission at boundary t is
+    ``sum_i w_i * (F(min(b_i, t)) - F(min(a_i, t)))`` -- but evaluating
+    F at every (segment, boundary) pair is an [nb, N] traversal.
+    Instead, split by how a segment meets a boundary: segments ENDING
+    at or before t contribute their whole (already-computed) integral
+    -- a segment-sum into the bin of ``b`` plus a tiny cumsum over
+    bins -- and only segments STRADDLING t (``a < t < b``; at most one
+    per device per boundary, precomputed host-side as (pseg, pk)
+    pairs) need a partial ``w * (F(t) - F(a))``.  Exact, and the pair
+    set is ~devices x boundaries, thousands of terms instead of
+    boundaries x segments millions."""
+    per_seg = ops.segment_trapz(a, b, w, kt, kv, cum, period=period)
+    per_dev = jax.ops.segment_sum(per_seg, dev,
+                                  num_segments=n_dev) / _J_PER_KWH
+    full = jnp.cumsum(jax.ops.segment_sum(per_seg, bucket,
+                                          num_segments=nb))
+    if nb > 1:
+        F = _prefix_fn(kt, kv, cum, period)
+        corr = jax.ops.segment_sum(pw * (F(tbr)[pk] - F(a)[pseg]), pk,
+                                   num_segments=nb - 1)
+        full = full.at[:nb - 1].add(corr)
+    return per_dev, full / _J_PER_KWH
+
+
+# ---------------------------------------------------------------------------
+# The backend object megasim drives.
+# ---------------------------------------------------------------------------
+
+class _JaxBulk:
+    """Drop-in for ``megasim._NumpyBulk`` that records the bulk work
+    during the event loop and retires it compiled at finalize.  See the
+    module docstring for the four phases; ``self.t`` carries the same
+    phase-timing keys the numpy backend reports, so the bench's
+    speedup rows compare like-for-like."""
+
+    name = "jax"
+    wants_tables = True
+
+    def __init__(self, n_dev: int):
+        self.n_dev = n_dev
+        self.t = {"biggap_s": 0.0, "billing_s": 0.0, "energy_s": 0.0,
+                  "carbon_s": 0.0}
+        # transition log (energy) and billing records, appended by the
+        # event loop, reduced at finalize (array.array: appends like a
+        # list, converts to ndarray as a buffer view instead of a
+        # million-element Python float walk)
+        self._ekey = array.array("i")
+        self._edt = array.array("d")
+        self._epw = array.array("d")
+        self._bill: List[Tuple[int, int, int, float]] = []
+        self._scalar_waits: List[float] = []
+        self._sid: Dict[str, int] = {}
+        self._flat = np.empty(0, dtype=np.float64)
+        self._off = np.empty(0, dtype=np.int32)
+        self._nextbig: Dict[Tuple[str, float], np.ndarray] = {}
+
+    # -- prepare: stacked stream matrices + nextbig tables -------------------
+    def prepare(self, streams: Dict[str, "megasim._Stream"],
+                stream_Ts: Dict[str, Sequence[float]]) -> None:
+        t0 = time.perf_counter()
+        mids = list(streams)
+        self._sid = {mid: i for i, mid in enumerate(mids)}
+        arrs = [streams[mid].arr for mid in mids]
+        lens = np.array([a.size for a in arrs], dtype=np.int64)
+        off = np.zeros(len(arrs) + 1, dtype=np.int64)
+        np.cumsum(lens, out=off[1:])
+        self._off = off[:-1].astype(np.int32)
+        self._flat = (np.concatenate(arrs) if arrs
+                      else np.empty(0, dtype=np.float64))
+        # one nextbig row per (stream, candidate timeout), bucketed by
+        # padded length so each bucket is a single static-shape compile;
+        # computed rows are parked in the stream's shared biggap dict
+        # (under ("nb", T) keys the numpy float-keyed lookups never see)
+        # so repeat runs on the same FleetTrace skip the scan entirely
+        buckets: Dict[int, List[Tuple[str, float, np.ndarray]]] = {}
+        for mid in mids:
+            ms = streams[mid]
+            if ms.n < 2:
+                continue
+            for T in dict.fromkeys(stream_Ts.get(mid, ())):
+                if math.isinf(T) or (mid, T) in self._nextbig:
+                    continue
+                row = ms.biggap.get(("nb", T))
+                if row is not None:
+                    self._nextbig[(mid, T)] = row
+                    continue
+                L = _pow2(ms.n)
+                buckets.setdefault(L, []).append((mid, float(T), ms.arr))
+        with enable_x64():
+            for L, grp in buckets.items():
+                rows = _pow2(len(grp), lo=8)
+                mat = np.zeros((rows, L), dtype=np.float64)
+                Ts = np.full(rows, np.inf)
+                for r, (_mid, T, arr) in enumerate(grp):
+                    mat[r, :arr.size] = arr
+                    mat[r, arr.size:] = arr[-1]
+                    Ts[r] = T
+                nb = np.asarray(_nextbig_rows(jnp.asarray(mat),
+                                              jnp.asarray(Ts)))
+                for r, (mid, T, _arr) in enumerate(grp):
+                    self._nextbig[(mid, T)] = nb[r]
+                    ms = streams[mid]
+                    if len(ms.biggap) >= megasim.biggap_cache.max_timeouts:
+                        ms.biggap.pop(next(iter(ms.biggap)))
+                    ms.biggap[("nb", T)] = nb[r]
+        self.t["biggap_s"] += time.perf_counter() - t0
+
+    # -- event-loop hooks ----------------------------------------------------
+    def charge(self, d: int, s: int, dt: float, p: float) -> None:
+        self._ekey.append(d * 3 + s)
+        self._edt.append(dt)
+        self._epw.append(p)
+
+    def last_of_run(self, ms, T: float) -> int:
+        t0 = time.perf_counter()
+        if ms.ptr >= ms.n - 1:
+            last = ms.n - 1
+        else:
+            row = self._nextbig.get((ms.mid, T))
+            if row is None:
+                # timeout the eager probe skipped (or an infinite one):
+                # the numpy scan path is the fallback, same answer
+                big = ms.biggaps(T)
+                j = int(np.searchsorted(big, ms.ptr))
+                last = int(big[j]) if j < big.size else ms.n - 1
+            else:
+                v = int(row[ms.ptr])
+                last = v if v <= ms.n - 2 else ms.n - 1
+        self.t["biggap_s"] += time.perf_counter() - t0
+        return last
+
+    def absorb(self, ms, d: int, lo: int, hi: int, t_done: float) -> None:
+        ent = ms.waiters.get(d)
+        if ent is None:
+            ent = ms.waiters[d] = [0, []]
+        ent[0] += hi - lo
+        ent[1].append((lo, hi))
+
+    def wait_one(self, ms, d: int, t: float) -> None:
+        ent = ms.waiters.get(d)
+        if ent is None:
+            ent = ms.waiters[d] = [0, []]
+        ent[0] += 1
+        ent[1].append(t)
+
+    def waiter_count(self, ms, d: int) -> int:
+        ent = ms.waiters.get(d)
+        return ent[0] if ent is not None else 0
+
+    def drain(self, ms, d: int, t: float) -> int:
+        ent = ms.waiters.pop(d, None)
+        if ent is None:
+            return 0
+        sid = self._sid[ms.mid]
+        for item in ent[1]:
+            if type(item) is tuple:
+                self._bill.append((sid, item[0], item[1], t))
+            else:
+                self._scalar_waits.append(t - item)
+        return ent[0]
+
+    # -- finalize: the compiled bulk reductions ------------------------------
+    def finalize(self, segs, fleet_segments, trace: CarbonTrace,
+                 horizon: float) -> "megasim._Fin":
+        with enable_x64():
+            energy_j, dur_s = self._finalize_energy()
+            waits = self._finalize_billing()
+            carbon_dev, timeline = self._finalize_carbon(
+                segs, fleet_segments, trace, horizon)
+        self.t["bulk_scan_s"] = sum(self.t.values())
+        return megasim._Fin(energy_j, dur_s, waits, carbon_dev, timeline,
+                            dict(self.t))
+
+    def _finalize_energy(self):
+        t0 = time.perf_counter()
+        n = len(self._ekey)
+        m = _pow2(n)
+        keys = _pad(np.asarray(self._ekey, dtype=np.int32), m, 0)
+        dt = _pad(np.asarray(self._edt, dtype=np.float64), m)
+        pw = _pad(np.asarray(self._epw, dtype=np.float64), m)
+        ej, ds = _energy_segsum(jnp.asarray(keys), jnp.asarray(dt),
+                                jnp.asarray(pw), num=self.n_dev * 3)
+        energy_j = np.asarray(ej).reshape(self.n_dev, 3)
+        dur_s = np.asarray(ds).reshape(self.n_dev, 3)
+        self.t["energy_s"] += time.perf_counter() - t0
+        return energy_j, dur_s
+
+    def _finalize_billing(self) -> np.ndarray:
+        t0 = time.perf_counter()
+        scalar = np.asarray(self._scalar_waits, dtype=np.float64)
+        if not self._bill:
+            self.t["billing_s"] += time.perf_counter() - t0
+            return scalar
+        rec = np.asarray(self._bill, dtype=np.float64)
+        m = _pow2(rec.shape[0])
+        sid = _pad(rec[:, 0].astype(np.int32), m, 0)
+        lo = _pad(rec[:, 1].astype(np.int32), m, 0)
+        hi = _pad(rec[:, 2].astype(np.int32), m, 0)
+        tt = _pad(rec[:, 3], m)
+        total = int((hi - lo).sum())
+        w = _bill_gather(jnp.asarray(self._flat), jnp.asarray(self._off),
+                         jnp.asarray(sid), jnp.asarray(lo),
+                         jnp.asarray(hi), jnp.asarray(tt),
+                         total_pad=_pow2(total))
+        waits = np.concatenate([np.asarray(w)[:total], scalar])
+        self.t["billing_s"] += time.perf_counter() - t0
+        return waits
+
+    def _finalize_carbon(self, segs, fleet_segments, trace: CarbonTrace,
+                         horizon: float):
+        t0 = time.perf_counter()
+        n = len(fleet_segments)
+        if n == 0:
+            self.t["carbon_s"] += time.perf_counter() - t0
+            return [0.0] * self.n_dev, []
+        # fromiter over a flattened chain beats np.asarray on a
+        # millions-long list of 3-tuples by ~2.5x
+        seg = np.fromiter(itertools.chain.from_iterable(fleet_segments),
+                          dtype=np.float64, count=3 * n).reshape(n, 3)
+        a_np, b_np, w_np = seg[:, 0], seg[:, 1], seg[:, 2]
+        dev = np.repeat(np.arange(self.n_dev, dtype=np.int32),
+                        [len(s) for s in segs])
+        # hourly timeline, numpy-semantics bins: they cover
+        # max(horizon, last segment end), the last bin absorbing any
+        # overshoot.  Host-side prep for _carbon_fused: each segment's
+        # full integral lands in the bin of its END (``bucket``), and
+        # the (segment, boundary) STRADDLE pairs -- bounded by devices
+        # x boundaries, since a device's power segments are disjoint in
+        # time -- are expanded with one repeat/cumsum.
+        bin_s = 3600.0
+        end = max(horizon, float(b_np.max()))
+        nb = max(int(math.ceil(end / bin_s - 1e-12)), 1)
+        tbr = bin_s * np.arange(1, nb)               # interior boundaries
+        k_lo = np.searchsorted(tbr, a_np, side="right")
+        bucket = np.searchsorted(tbr, b_np, side="left").astype(np.int32)
+        cnt = np.maximum(bucket - k_lo, 0)
+        total = int(cnt.sum())
+        pcap = _pow2(total, lo=1024)
+        pseg = np.zeros(pcap, dtype=np.int32)
+        pk = np.zeros(pcap, dtype=np.int32)
+        pw = np.zeros(pcap, dtype=np.float64)        # pad pairs weigh 0
+        if total:
+            ps = np.repeat(np.arange(n, dtype=np.int32), cnt)
+            starts = np.cumsum(cnt) - cnt
+            pseg[:total] = ps
+            pk[:total] = (np.arange(total) - starts[ps] + k_lo[ps])
+            pw[:total] = w_np[ps]
+        m = _pow2(n)
+        per_dev, cums = _carbon_fused(
+            jnp.asarray(_pad(a_np, m)), jnp.asarray(_pad(b_np, m)),
+            jnp.asarray(_pad(w_np, m)),              # pad weight 0
+            jnp.asarray(_pad(dev, m, 0)),
+            jnp.asarray(_pad(bucket, m, 0)),
+            jnp.asarray(pseg), jnp.asarray(pk), jnp.asarray(pw),
+            jnp.asarray(np.asarray(trace._kt)),
+            jnp.asarray(np.asarray(trace._kv)),
+            jnp.asarray(np.asarray(trace._cum)), jnp.asarray(tbr),
+            period=float(trace.period_s), n_dev=self.n_dev, nb=nb)
+        cums = np.asarray(cums)
+        timeline = [(min((j + 1) * bin_s, end), float(cums[j]))
+                    for j in range(nb)]
+        self.t["carbon_s"] += time.perf_counter() - t0
+        return list(np.asarray(per_dev)), timeline
+
+
+# ---------------------------------------------------------------------------
+# Vmapped sweeps: many production-shaped days through one compiled stack.
+# ---------------------------------------------------------------------------
+
+def _diurnal_hr_j(base_hr: float, t: jnp.ndarray) -> jnp.ndarray:
+    """jnp twin of ``traces._diurnal_hr`` (same day shape)."""
+    h = (t / 3600.0) % 24.0
+    return base_hr * (0.55 + 0.45 * jnp.sin((h - 9.0) * jnp.pi / 12.0))
+
+
+def _sample_group(keys: np.ndarray, rate_fn, rate_max: float,
+                  horizon_s: float, n_max: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized thinned inhomogeneous Poisson at a STATIC shape: draw
+    the envelope count (clamped to ``n_max``, sized for ~10 sigma of
+    headroom), keep the first ``n`` of ``n_max`` uniforms, thin by
+    ``rate(t)/rate_max``, and sort rejected samples to +inf.  One
+    jit-compiled vmap over every (sweep point, route) in the group --
+    the whole sweep's trace generation is a single compiled call."""
+
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        lam = rate_max * horizon_s / 3600.0
+        cnt = jnp.minimum(jax.random.poisson(k1, lam), n_max)
+        t = jax.random.uniform(k2, (n_max,), dtype=jnp.float64,
+                               maxval=horizon_s)
+        u = jax.random.uniform(k3, (n_max,), dtype=jnp.float64,
+                               maxval=rate_max)
+        keep = (jnp.arange(n_max) < cnt) & (u < rate_fn(t))
+        return jnp.sort(jnp.where(keep, t, jnp.inf)), keep.sum()
+
+    with enable_x64():
+        ts, counts = jax.jit(jax.vmap(one))(jnp.asarray(keys))
+    return np.asarray(ts), np.asarray(counts)
+
+
+def _envelope_n(rate_max_hr: float, horizon_s: float) -> int:
+    lam = rate_max_hr * horizon_s / 3600.0
+    return int(lam + 10.0 * math.sqrt(lam + 1.0) + 20.0)
+
+
+def sweep_traces(seeds: Sequence[int], *, generator: str = "flash-crowd",
+                 n_routes: int = 8, fleet: str = "2xh100+2xa100+2xl40s",
+                 horizon_s: float = DAY, base_rate_hr: float = 40.0,
+                 spike_x: float = 40.0,
+                 spike_start_s: float = 13 * 3600.0,
+                 spike_width_s: float = 1800.0) -> List[FleetTrace]:
+    """A batch of production-shaped days, generated on the compiled
+    stack: per-route PRNG keys derive from the same ``_route_plan``
+    child seeds as the numpy generators (same checkpoint plan, same
+    seed discipline -- same seed, bit-identical batch), and ALL routes
+    of ALL sweep points sample in one vmapped thinning call per rate
+    family.  The day shapes mirror ``traces.flash_crowd`` /
+    ``product_launch`` / ``regional_outage``; arrival streams come
+    from jax's PRNG, so they are statistically -- not bitwise -- the
+    numpy generators' days."""
+    if generator not in ("flash-crowd", "product-launch",
+                         "regional-outage"):
+        raise KeyError(f"unknown sweep generator {generator!r}")
+    plans = [_route_plan(np.random.default_rng(int(s)), n_routes)
+             for s in seeds]
+    keys = np.stack([
+        np.asarray(jax.random.PRNGKey(int(child)))
+        for child_seeds, _ in plans for child in child_seeds])
+    keys = keys.reshape(len(seeds), n_routes, 2)
+
+    tail_s = 2.0 * spike_width_s
+
+    def flash_rate(t):
+        r = _diurnal_hr_j(base_rate_hr, t)
+        dt = t - spike_start_s
+        hot = (dt >= 0.0) & (dt < spike_width_s)
+        cool = (dt >= spike_width_s) & (dt < spike_width_s + tail_s)
+        boost = jnp.where(hot, spike_x, 0.0) + jnp.where(
+            cool, spike_x * jnp.exp(-(dt - spike_width_s)
+                                    / (0.35 * spike_width_s)), 0.0)
+        return r * (1.0 + boost)
+
+    def launch_rate(t):
+        dt = t - 9 * 3600.0
+        surge = 60.0 + (600.0 - 60.0) * jnp.exp(-jnp.maximum(dt, 0.0)
+                                                / (4 * 3600.0))
+        return jnp.where(dt >= 0.0, surge, 0.0)
+
+    def outage_rate(t):
+        out0, out1 = 11 * 3600.0, 12 * 3600.0
+        r = _diurnal_hr_j(base_rate_hr, t)
+        dark = (t >= out0) & (t < out1)
+        surge = (t >= out1) & (t < out1 + 1800.0)
+        return jnp.where(dark, 0.0, r * jnp.where(surge, 3.0, 1.0))
+
+    base_fn = _diurnal_hr_j
+    if generator == "flash-crowd":
+        groups = [(keys[:, 0, :], flash_rate,
+                   base_rate_hr * (1.0 + spike_x)),
+                  (keys[:, 1:, :].reshape(-1, 2),
+                   lambda t: base_fn(base_rate_hr, t), base_rate_hr)]
+    elif generator == "product-launch":
+        groups = [(keys[:, 0, :], launch_rate, 600.0),
+                  (keys[:, 1:, :].reshape(-1, 2),
+                   lambda t: base_fn(base_rate_hr, t), base_rate_hr)]
+    else:
+        groups = [(keys.reshape(-1, 2), outage_rate, base_rate_hr * 3.0)]
+
+    sampled: List[Tuple[np.ndarray, np.ndarray]] = []
+    for gkeys, rate_fn, rmax in groups:
+        sampled.append(_sample_group(
+            gkeys, rate_fn, rmax, horizon_s,
+            _envelope_n(rmax, horizon_s)) if gkeys.size
+            else (np.empty((0, 0)), np.empty(0, dtype=np.int64)))
+
+    traces: List[FleetTrace] = []
+    for p, (seed, (_, ckpt)) in enumerate(zip(seeds, plans)):
+        routes = []
+        for i in range(n_routes):
+            if len(groups) == 1:
+                ts, cnt = sampled[0]
+                row = p * n_routes + i
+            elif i == 0:
+                ts, cnt = sampled[0]
+                row = p
+            else:
+                ts, cnt = sampled[1]
+                row = p * (n_routes - 1) + (i - 1)
+            arr = ts[row, :int(cnt[row])].copy()
+            routes.append(RouteTrace(route_id=f"r{i}", arrivals_s=arr,
+                                     checkpoint_gb=float(ckpt[i])))
+        traces.append(FleetTrace(name=f"{generator}-sweep", fleet=fleet,
+                                 horizon_s=horizon_s, routes=tuple(routes),
+                                 seed=int(seed)))
+    return traces
+
+
+def run_mega_sweep(scenarios=None, *, seeds: Optional[Sequence[int]] = None,
+                   policy_factory=None, router: str = "warm-first",
+                   compute_bound: bool = False,
+                   scenario_kw: Optional[dict] = None,
+                   **trace_kw) -> List[FleetResult]:
+    """Run a sweep of mega days on the jax backend: either explicit
+    ``scenarios`` (any ``FleetScenario`` in run_mega's scope) or
+    ``seeds`` + generator kwargs (``generator=``, ``n_routes=``,
+    ``fleet=``, ... -- see ``sweep_traces``), in which case trace
+    generation for the whole batch is one vmapped compiled call.
+
+    The points then replay through ``run_mega(backend="jax")``
+    sequentially (the structural event loop is inherently serial), but
+    every compiled bulk program -- nextbig scans, billing gather,
+    energy segment-sums, carbon integrals -- is shared across points
+    through the power-of-two shape buckets, so the batch pays each
+    compile once: point 1 is compile-bound, points 2..P run hot.
+    Returns one ``FleetResult`` per point, in input order.
+    """
+    if (scenarios is None) == (seeds is None):
+        raise ValueError("pass exactly one of scenarios= or seeds=")
+    if seeds is not None:
+        if policy_factory is None:
+            from repro.core.scheduler import Breakeven
+            policy_factory = Breakeven
+        traces = sweep_traces(seeds, **trace_kw)
+        scenarios = [tr.to_scenario(policy_factory, router,
+                                    **(scenario_kw or {}))
+                     for tr in traces]
+    elif trace_kw:
+        raise ValueError(f"trace kwargs {sorted(trace_kw)} need seeds=")
+    return [megasim.run_mega(sc, compute_bound=compute_bound,
+                             backend="jax")
+            for sc in scenarios]

@@ -48,6 +48,8 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import time
+import weakref
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -140,13 +142,74 @@ class _Rep:
                 f"evict_at={self.evict_at:g})")
 
 
+class _BigGapCache:
+    """Bounded LRU of derived per-stream arrays, shared across
+    ``run_mega`` calls on the same ``FleetTrace``.
+
+    Keyed by ``(id(arrivals), horizon)`` of the raw ``arrivals_s``
+    object each ``FleetModel`` carries: a ``FleetTrace`` hands every
+    ``to_scenario`` the SAME per-route arrays, so repeat runs (sweeps)
+    hit.  An entry holds the sorted/horizon-filtered arrival array plus
+    the stream's ``T -> big-gap index`` dict, so neither is rebuilt per
+    run; a weakref to the source guards against ``id()`` reuse after
+    gc.  Sources that cannot be weakly referenced (plain lists) are
+    derived fresh each run -- the pre-cache behaviour.
+    """
+
+    def __init__(self, maxsize: int = 256, max_timeouts: int = 16):
+        if maxsize < 1 or max_timeouts < 1:
+            raise ValueError("cache bounds must be positive")
+        self.maxsize = maxsize             # streams kept (LRU evicted)
+        self.max_timeouts = max_timeouts   # per-stream biggap dict cap
+        self.hits = 0
+        self.misses = 0
+        self._d: Dict[Tuple[int, float], tuple] = {}   # insertion = LRU
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = self.misses = 0
+
+    def stream_arrays(self, source, horizon: float
+                      ) -> Tuple[np.ndarray, Dict[float, np.ndarray]]:
+        """The (derived arrival array, shared biggap dict) for a raw
+        ``arrivals_s`` object at a horizon, cached."""
+        key = (id(source), float(horizon))
+        ent = self._d.get(key)
+        if ent is not None and ent[0]() is source:
+            self.hits += 1
+            self._d.pop(key)               # LRU bump
+            self._d[key] = ent
+            return ent[1], ent[2]
+        self.misses += 1
+        arr = np.sort(np.asarray(source, dtype=np.float64))
+        arr = arr[(arr >= 0.0) & (arr < horizon)]
+        biggap: Dict[float, np.ndarray] = {}
+        try:
+            ref = weakref.ref(source)
+        except TypeError:
+            return arr, biggap             # not weakly referenceable
+        if ent is not None:
+            self._d.pop(key, None)         # stale entry from id() reuse
+        while len(self._d) >= self.maxsize:
+            self._d.pop(next(iter(self._d)))
+        self._d[key] = (ref, arr, biggap)
+        return arr, biggap
+
+
+biggap_cache = _BigGapCache()
+
+
 class _Stream:
     """One model's arrival stream + replica-set bookkeeping."""
     __slots__ = ("mid", "arr", "n", "ptr", "ev", "res", "loading", "queued",
                  "waiters", "run_active", "run_dev", "run_last", "run_E0",
                  "suspended", "biggap")
 
-    def __init__(self, mid: str, arr: np.ndarray):
+    def __init__(self, mid: str, arr: np.ndarray,
+                 biggap: Optional[Dict[float, np.ndarray]] = None):
         self.mid = mid
         self.arr = arr                   # sorted, within [0, horizon)
         self.n = int(arr.size)
@@ -155,38 +218,158 @@ class _Stream:
         self.res: set = set()            # device indices with warm replica
         self.loading: set = set()        # device indices mid-load
         self.queued: set = set()         # queued-not-started loads
-        self.waiters: Dict[int, List[float]] = {}
+        self.waiters: Dict[int, list] = {}
         self.run_active = False
         self.run_dev = -1
         self.run_last = -1
         self.run_E0 = math.inf
         self.suspended = False           # arrivals pre-absorbed into a load
-        self.biggap: Dict[float, np.ndarray] = {}   # T -> big-gap indices
+        # T -> big-gap indices; shared through biggap_cache so repeat
+        # runs on the same FleetTrace reuse the scans
+        self.biggap: Dict[float, np.ndarray] = \
+            {} if biggap is None else biggap
 
     def biggaps(self, T: float) -> np.ndarray:
         """Indices i with arr[i+1] - arr[i] > T (a warm run starting at
         or before i ends at i).  Cached per distinct timeout (timeouts
-        differ per SKU, not per device, so this stays tiny)."""
+        differ per SKU, not per device, so this stays tiny), bounded at
+        ``biggap_cache.max_timeouts`` oldest-out."""
         got = self.biggap.get(T)
         if got is None:
             if math.isinf(T):
                 got = np.empty(0, dtype=np.int64)
             else:
                 got = np.flatnonzero(np.diff(self.arr) > T)
+            if len(self.biggap) >= biggap_cache.max_timeouts:
+                self.biggap.pop(next(iter(self.biggap)))
             self.biggap[T] = got
         return got
 
 
+class _Fin:
+    """What a bulk backend hands back at finalize time."""
+    __slots__ = ("energy_j", "dur_s", "waits", "carbon_dev",
+                 "carbon_timeline", "timings")
+
+    def __init__(self, energy_j, dur_s, waits, carbon_dev, carbon_timeline,
+                 timings):
+        self.energy_j = energy_j           # [N][3] joules per state
+        self.dur_s = dur_s                 # [N][3] seconds per state
+        self.waits = waits                 # per-request waits, any order
+        self.carbon_dev = carbon_dev       # [N] kgCO2e
+        self.carbon_timeline = carbon_timeline
+        self.timings = timings             # phase -> wall seconds
+
+
+class _NumpyBulk:
+    """The reference bulk backend: the exact inline numpy/Python paths
+    the simulator shipped with (the bit-exact anchor vs ``run_fleet``),
+    instrumented with per-phase wall-clock so the compiled backend's
+    bulk-scan speedup is measured like-for-like.
+
+    The seam: the event loop owns all STRUCTURAL state (heap, replica
+    sets, pointers) and calls the backend for every bulk operation --
+    energy charging, waiter billing, big-gap run claiming, and the
+    finalize pass (carbon integration, waits assembly).  Both backends
+    see identical calls in identical order, so every control-flow
+    decision (routing tie-breaks, run extents) is backend-invariant by
+    construction; only the arithmetic engine differs.
+    """
+
+    name = "numpy"
+    wants_tables = False
+
+    def __init__(self, n_dev: int):
+        self.energy_j = [[0.0, 0.0, 0.0] for _ in range(n_dev)]
+        self.dur_s = [[0.0, 0.0, 0.0] for _ in range(n_dev)]
+        self.waits: List[float] = []
+        self.t = {"biggap_s": 0.0, "billing_s": 0.0, "energy_s": 0.0,
+                  "carbon_s": 0.0}
+
+    def prepare(self, streams, stream_Ts) -> None:
+        pass
+
+    def charge(self, d: int, s: int, dt: float, p: float) -> None:
+        self.energy_j[d][s] += dt * p
+        self.dur_s[d][s] += dt
+
+    def last_of_run(self, ms: _Stream, T: float) -> int:
+        t0 = time.perf_counter()
+        big = ms.biggaps(T)
+        j = int(np.searchsorted(big, ms.ptr))
+        last = int(big[j]) if j < big.size else ms.n - 1
+        self.t["biggap_s"] += time.perf_counter() - t0
+        return last
+
+    def absorb(self, ms: _Stream, d: int, lo: int, hi: int,
+               t_done: float) -> None:
+        t0 = time.perf_counter()
+        ms.waiters.setdefault(d, []).extend(ms.arr[lo:hi].tolist())
+        self.t["billing_s"] += time.perf_counter() - t0
+
+    def wait_one(self, ms: _Stream, d: int, t: float) -> None:
+        ms.waiters.setdefault(d, []).append(t)
+
+    def waiter_count(self, ms: _Stream, d: int) -> int:
+        return len(ms.waiters.get(d, ()))
+
+    def drain(self, ms: _Stream, d: int, t: float) -> int:
+        w = ms.waiters.pop(d, None)
+        if not w:
+            return 0
+        t0 = time.perf_counter()
+        self.waits.extend(t - a for a in w)
+        self.t["billing_s"] += time.perf_counter() - t0
+        return len(w)
+
+    def finalize(self, segs, fleet_segments, trace, horizon: float) -> _Fin:
+        t0 = time.perf_counter()
+        waits = np.asarray(self.waits, dtype=np.float64)
+        self.t["billing_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        carbon_dev = [trace.carbon_for_segments(s) for s in segs]
+        timeline = carbon_timeline_kg(trace, fleet_segments, end_s=horizon)
+        self.t["carbon_s"] += time.perf_counter() - t0
+        self.t["bulk_scan_s"] = sum(self.t.values())
+        return _Fin(self.energy_j, self.dur_s, waits, carbon_dev, timeline,
+                    dict(self.t))
+
+
 def run_mega(scenario: FleetScenario, *,
-             compute_bound: bool = True) -> FleetResult:
+             compute_bound: bool = True,
+             backend: str = "numpy") -> FleetResult:
     """Vectorized replacement for ``run_fleet`` on its supported scope
     (see module docstring); raises ``MegaUnsupportedError`` otherwise.
 
     ``compute_bound=False`` skips the O(requests) clairvoyant-bound pass
     (reported as 0.0) -- the bound is a per-gap Python loop and would
     dominate wall-clock on multi-million-request days.
+
+    ``backend`` selects the bulk-scan engine: ``"numpy"`` (default) is
+    the bit-exact anchor vs ``run_fleet``; ``"jax"`` retires the bulk
+    phases -- big-gap scans, deferred waiter billing, per-state energy
+    segment-sums, and the carbon trapezoid integral -- as jit-compiled
+    array programs (``fleet/mega/jaxback.py``, docs/SCALE.md).  Both
+    backends drive the identical structural event loop, so request
+    counts and cold starts are equal and float totals agree to <=1e-9
+    relative (pinned in tests).  ``FleetResult.phase_timings`` reports
+    per-phase wall seconds for either backend.
     """
     sc = scenario
+    if backend == "numpy":
+        _Bulk = _NumpyBulk
+    elif backend == "jax":
+        try:
+            from repro.fleet.mega import jaxback
+        except ImportError as exc:
+            raise RuntimeError(
+                "run_mega(backend='jax') needs jax, which is not "
+                "importable in this environment; install jax or use "
+                "backend='numpy'") from exc
+        _Bulk = jaxback._JaxBulk
+    else:
+        raise ValueError(
+            f"unknown backend {backend!r}: expected 'numpy' or 'jax'")
     # ---- scope guard ------------------------------------------------------
     if not (sc.router == "warm-first"
             or isinstance(sc.router, WarmFirstRouter)):
@@ -224,8 +407,7 @@ def run_mega(scenario: FleetScenario, *,
     state = [_BARE] * N
     watts = [p_bare[d] for d in range(N)]
     since = [0.0] * N
-    energy_j = [[0.0, 0.0, 0.0] for _ in range(N)]
-    dur_s = [[0.0, 0.0, 0.0] for _ in range(N)]
+    bulk = _Bulk(N)
     touched = [[False, False, False] for _ in range(N)]
     key_order: List[List[int]] = [[] for _ in range(N)]
     segs: List[List[Tuple[float, float, float]]] = [[] for _ in range(N)]
@@ -249,8 +431,7 @@ def run_mega(scenario: FleetScenario, *,
         t0 = since[d]
         dt = t - t0
         p = watts[d]
-        energy_j[d][s] += dt * p
-        dur_s[d][s] += dt
+        bulk.charge(d, s, dt, p)
         _touch(d, s)
         if dt > 0.0:
             sg = segs[d]
@@ -305,9 +486,30 @@ def run_mega(scenario: FleetScenario, *,
     # ---- streams, replicas, heap -----------------------------------------
     streams: Dict[str, _Stream] = {}
     for fm in sc.models:
-        a = np.sort(np.asarray(fm.arrivals_s, dtype=np.float64))
-        a = a[(a >= 0.0) & (a < horizon)]
-        streams[fm.spec.model_id] = _Stream(fm.spec.model_id, a)
+        a, shared_biggap = biggap_cache.stream_arrays(fm.arrivals_s,
+                                                      horizon)
+        streams[fm.spec.model_id] = _Stream(fm.spec.model_id, a,
+                                            shared_biggap)
+    if bulk.wants_tables:
+        # candidate constant timeouts per stream: one probe per (model,
+        # SKU present).  A probe failure is skipped, NOT raised -- the
+        # numpy path probes lazily on first routing, so scope rejection
+        # must surface at the same instant on either backend.
+        rep_dev: Dict[str, int] = {}
+        for i, k in enumerate(sku_of):
+            rep_dev.setdefault(k, i)
+        stream_Ts: Dict[str, List[float]] = {}
+        for mid in streams:
+            Ts: List[float] = []
+            for d0 in rep_dev.values():
+                try:
+                    T = _loader_T(mid, d0)[1]
+                except MegaUnsupportedError:
+                    continue
+                if T not in Ts:
+                    Ts.append(T)
+            stream_Ts[mid] = Ts
+        bulk.prepare(streams, stream_Ts)
 
     reps: Dict[Tuple[int, str], _Rep] = {}
 
@@ -323,7 +525,6 @@ def run_mega(scenario: FleetScenario, *,
     seq = itertools.count()
     n_live = 0                  # pending arrival + load_done heap entries
     n_zero = 0                  # warm-served requests (zero added latency)
-    waits: List[float] = []     # per-request cold/queue waits
     replica_log: Dict[str, List[Tuple[float, int]]] = {}
     inflight: List[Optional[str]] = [None] * N     # loader channel
     dq = [deque() for _ in range(N)]               # queued loads (FIFO)
@@ -450,8 +651,7 @@ def run_mega(scenario: FleetScenario, *,
                 and ms.ptr < ms.n):
             k = int(np.searchsorted(ms.arr, t_done, "left"))
             if k > ms.ptr:
-                ms.waiters.setdefault(d, []).extend(
-                    ms.arr[ms.ptr:k].tolist())
+                bulk.absorb(ms, d, ms.ptr, k, t_done)
                 ms.ptr = k
             ms.suspended = True
 
@@ -486,9 +686,7 @@ def run_mega(scenario: FleetScenario, *,
             if float(ms.arr[ms.ptr]) > rep.evict_at:
                 return          # idle gap: the armed eviction restarts us
             T = _loader_T(ms.mid, d)[1]
-            big = ms.biggaps(T)
-            j = int(np.searchsorted(big, ms.ptr))
-            last = int(big[j]) if j < big.size else ms.n - 1
+            last = bulk.last_of_run(ms, T)
             ms.run_active = True
             ms.run_dev = d
             ms.run_last = last
@@ -498,10 +696,7 @@ def run_mega(scenario: FleetScenario, *,
             push_arr(ms)
 
     def drain_waiters(d: int, ms: _Stream, t: float) -> None:
-        w = ms.waiters.pop(d, None)
-        if w:
-            d_reqs[d] += len(w)
-            waits.extend(t - a for a in w)
+        d_reqs[d] += bulk.drain(ms, d, t)
 
     def on_load_done(t: float, d: int, mid: str) -> None:
         inflight[d] = None
@@ -539,7 +734,7 @@ def run_mega(scenario: FleetScenario, *,
         if locs:
             # warm-first: least-pressure warm replica; a mid-load replica
             # counts as a full pool so residency wins ties
-            d = min(locs, key=lambda x: (len(ms.waiters.get(x, ())),
+            d = min(locs, key=lambda x: (bulk.waiter_count(ms, x),
                                          0 if x in ms.res else 1, x))
             if d in ms.res:
                 d_reqs[d] += 1
@@ -553,7 +748,7 @@ def run_mega(scenario: FleetScenario, *,
                 arm(d, mid, t)
                 continue_stream(ms)
             else:
-                ms.waiters.setdefault(d, []).append(t)
+                bulk.wait_one(ms, d, t)
                 if ms.ptr < ms.n and not ms.suspended:
                     push_arr(ms)
             return
@@ -561,7 +756,7 @@ def run_mega(scenario: FleetScenario, *,
         # serialized channel (dedup while queued or in flight)
         d = least_loaded(mid)
         rep = get_rep(d, mid)
-        ms.waiters.setdefault(d, []).append(t)
+        bulk.wait_one(ms, d, t)
         if not rep.loading and mid not in dq_set[d]:
             dq_set[d].add(mid)
             dq[d].append(mid)
@@ -662,15 +857,21 @@ def run_mega(scenario: FleetScenario, *,
     for d in range(N):
         _trans(d, final_clock, state[d], watts[d])   # totals() flush
 
+    # ---- bulk finalize: billing, energy buckets, carbon integration ------
+    fleet_segments: List[Tuple[float, float, float]] = []
+    for d in range(N):
+        fleet_segments.extend(segs[d])
+    fin = bulk.finalize(segs, fleet_segments, trace, horizon)
+    energy_j = fin.energy_j
+    dur_s = fin.dur_s
+
     # ---- reports (same construction as run_fleet) -------------------------
     reports = []
-    fleet_segments: List[Tuple[float, float, float]] = []
     for d in range(N):
         e_wh = {_STATE_KEYS[s]: energy_j[d][s] / 3600.0
                 for s in key_order[d]}
         e_wh["total"] = sum(e_wh.values())
         durations = {_STATE_KEYS[s]: dur_s[d][s] for s in key_order[d]}
-        fleet_segments.extend(segs[d])
         reports.append(DeviceReport(
             instance_id=dids[d], sku=devs[d].sku.key,
             energy_wh=e_wh,
@@ -679,7 +880,7 @@ def run_mega(scenario: FleetScenario, *,
             cold_starts=d_cold[d], requests=d_reqs[d],
             resident=[m for m in dev_models[d] if reps[(d, m)].resident],
             meter_state=_STATE_KEYS[state[d]],
-            carbon_kg=trace.carbon_for_segments(segs[d]),
+            carbon_kg=fin.carbon_dev[d],
             durations_s=durations))
 
     if compute_bound:
@@ -696,14 +897,13 @@ def run_mega(scenario: FleetScenario, *,
                 state_wh[k] = state_wh.get(k, 0.0) + v
         for k, v in r.durations_s.items():
             state_s[k] = state_s.get(k, 0.0) + v
-    all_lat = np.concatenate([np.zeros(n_zero),
-                              np.asarray(waits, dtype=np.float64)])
+    all_lat = np.concatenate([np.zeros(n_zero), fin.waits])
     return FleetResult(
         router="warm-first", horizon_s=horizon, devices=reports,
         energy_wh=energy,
         parking_tax_wh=sum(r.parking_tax_wh for r in reports),
         cold_starts=sum(d_cold), requests=sum(d_reqs),
-        added_latency_s_total=math.fsum(waits),
+        added_latency_s_total=math.fsum(fin.waits),
         migrations=0,
         lb_nongated_wh=lb_nongated, cv_per_model_wh=cv_sum,
         infra_usd=fleet_price_usd(sc.devices, horizon, sc.price_tier),
@@ -711,10 +911,10 @@ def run_mega(scenario: FleetScenario, *,
         carbon_kg=math.fsum(r.carbon_kg for r in reports),
         carbon_kg_flat=carbon_kg(energy, mix),
         carbon_trace_name=trace.name,
-        carbon_timeline=carbon_timeline_kg(trace, fleet_segments,
-                                           end_s=horizon),
+        carbon_timeline=fin.carbon_timeline,
         power_timeline=fleet_segments,
         latencies_s=np.sort(all_lat),
         replica_timeline={mid: list(log)
                           for mid, log in replica_log.items()},
-        state_energy_wh=state_wh, state_durations_s=state_s)
+        state_energy_wh=state_wh, state_durations_s=state_s,
+        phase_timings=fin.timings)

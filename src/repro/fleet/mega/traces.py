@@ -35,8 +35,12 @@ probability lambda(t)/lambda_max -- exact, and fully vectorized.
 """
 from __future__ import annotations
 
+import array
 import dataclasses
+import heapq
+import json
 import math
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -94,6 +98,71 @@ class FleetTrace:
             models.append(FleetModel(spec, route.arrivals_s))
         return FleetScenario(devices=devices, models=models, router=router,
                              horizon_s=self.horizon_s, **kwargs)
+
+    def to_jsonl(self, path: str | os.PathLike) -> None:
+        """Stream the trace to JSON-Lines telemetry: line 1 is the
+        header (name / fleet / horizon_s / seed / per-route footprints),
+        every following line one ``{"t_s", "route"}`` arrival event in
+        global time order -- written incrementally, so a multi-million-
+        request day never materializes its event list in memory.
+        ``from_jsonl`` reads it back losslessly (pinned in tests);
+        timestamps survive the round trip exactly via ``repr`` floats.
+        """
+        header = {
+            "name": self.name,
+            "fleet": self.fleet,
+            "horizon_s": float(self.horizon_s),
+            "seed": self.seed,
+            "routes": [{"route": r.route_id,
+                        "checkpoint_gb": float(r.checkpoint_gb)}
+                       for r in self.routes],
+        }
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(json.dumps(header) + "\n")
+            # lazy k-way merge over the (already sorted) per-route
+            # streams, route id breaking timestamp ties -- the
+            # to_records event order, without the event-list buffer
+
+            def _events(route: RouteTrace):
+                rid = route.route_id
+                return ((float(t), rid) for t in route.arrivals_s)
+
+            for t, rid in heapq.merge(*map(_events, self.routes)):
+                fh.write(f'{{"t_s": {t!r}, "route": {json.dumps(rid)}}}\n')
+
+    @classmethod
+    def from_jsonl(cls, path: str | os.PathLike) -> "FleetTrace":
+        """Stream a ``to_jsonl`` file back into a ``FleetTrace`` --
+        line-at-a-time, appending each event to its route's buffer, so
+        peak memory is the arrival arrays themselves.  Tolerant of
+        unsorted event lines (RouteTrace re-sorts); routes declared in
+        the header with no events come back zero-traffic."""
+        with open(path, "r", encoding="utf-8") as fh:
+            first = fh.readline()
+            if not first.strip():
+                raise ValueError(f"{path}: empty jsonl trace")
+            header = json.loads(first)
+            per_route: Dict[str, array.array] = {
+                r["route"]: array.array("d") for r in header["routes"]}
+            for ln, line in enumerate(fh, start=2):
+                if not line.strip():
+                    continue
+                e = json.loads(line)
+                try:
+                    per_route[e["route"]].append(float(e["t_s"]))
+                except KeyError:
+                    raise ValueError(
+                        f"{path}:{ln}: event references unknown route "
+                        f"{e.get('route')!r}") from None
+        routes = tuple(
+            RouteTrace(route_id=r["route"],
+                       arrivals_s=np.frombuffer(
+                           per_route[r["route"]], dtype=np.float64).copy(),
+                       checkpoint_gb=float(r["checkpoint_gb"]))
+            for r in header["routes"])
+        return cls(name=str(header["name"]), fleet=str(header["fleet"]),
+                   horizon_s=float(header["horizon_s"]), routes=routes,
+                   seed=header.get("seed"))
 
     def to_records(self) -> Dict:
         """Flat telemetry-export form: a header (inventory + per-route

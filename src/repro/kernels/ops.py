@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pl
+from repro.kernels.segment_trapz import segment_trapz as _trapz_pl
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -41,3 +42,23 @@ def rglru_scan(a, b, h0, *, use_pallas: bool = True) -> jnp.ndarray:
     if use_pallas:
         return _rglru_pl(a, b, h0, interpret=INTERPRET)
     return ref.rglru_scan_ref(a, b, h0)
+
+
+def segment_trapz(a, b, w, kt, kv, cum, *, period: float,
+                  use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Per-segment trapezoid integrals of a periodic piecewise-linear
+    curve (the carbon-integration primitive; see segment_trapz.py).
+
+    ``use_pallas=None`` (the default) picks the kernel on real hardware
+    and the jnp reference when kernels would run interpreted: unlike
+    the attention kernels above (called on a handful of activations per
+    step), this one streams millions of metered segments per fleet day,
+    where a Python-interpreted kernel body would dominate the very
+    bulk-scan phase it exists to accelerate.
+    """
+    if use_pallas is None:
+        use_pallas = not INTERPRET
+    if use_pallas:
+        return _trapz_pl(a, b, w, kt, kv, cum, period=period,
+                         interpret=INTERPRET)
+    return ref.segment_trapz_ref(a, b, w, kt, kv, cum, period=period)

@@ -56,6 +56,30 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         .astype(q.dtype)
 
 
+def segment_trapz_ref(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
+                      kt: jnp.ndarray, kv: jnp.ndarray, cum: jnp.ndarray, *,
+                      period: float) -> jnp.ndarray:
+    """Per-segment trapezoid integrals of a periodic piecewise-linear
+    curve: ``out_i = w_i * (F(b_i) - F(a_i))`` with F the prefix
+    integral of the curve described by extended knots (kt, kv) and
+    prefix integrals cum over [0, period] (``CarbonTrace`` internals).
+    a, b, w: [N]; kt, kv, cum: [K]."""
+    total = cum[-1]
+
+    def prefix(t):
+        k = jnp.floor(t / period)
+        p = t - k * period
+        j = jnp.clip(jnp.searchsorted(kt, p, side="right") - 1,
+                     0, kt.shape[0] - 2)
+        span = kt[j + 1] - kt[j]
+        dt = p - kt[j]
+        v_p = kv[j] + (kv[j + 1] - kv[j]) * dt / jnp.where(span > 0, span,
+                                                           1.0)
+        return k * total + cum[j] + dt * (kv[j] + v_p) * 0.5
+
+    return w * (prefix(b) - prefix(a))
+
+
 def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.

@@ -1,0 +1,98 @@
+"""Per-segment trapezoid integrals of a periodic piecewise-linear
+function, as a Pallas kernel: the carbon-integration primitive of the
+mega-simulator's jax backend (``fleet/mega/jaxback.py``).
+
+Given a metered power timeline -- segments ``(a_i, b_i, w_i)`` with
+constant power ``w_i`` over ``[a_i, b_i]`` -- and a periodic
+piecewise-linear intensity curve ``i(t)`` described by its extended
+knots (``CarbonTrace`` internals: knot times ``kt`` covering
+``[0, period]``, knot values ``kv``, and prefix trapezoid integrals
+``cum``), compute per segment
+
+    out_i = w_i * (F(b_i) - F(a_i)),   F(t) = \\int_0^t i(u) du
+
+exactly (trapezoids between knots, whole periods factored out) -- the
+same closed form ``CarbonTrace.integral`` evaluates one segment at a
+time in Python, across a million metered segments in one pass.
+
+The kernel is embarrassingly parallel over segments: grid over
+``BN``-sized segment blocks, the (small, <=64-knot) curve tables
+broadcast to every program.  The knot lookup is branchless -- a
+``[BN, K]`` compare-and-sum instead of a binary search -- which is the
+VPU-friendly shape (K is tiny, so the redundant compares are free
+next to the HBM stream of segment endpoints).  ``jnp.take`` gathers
+along the knot axis stay in VMEM.
+
+Numerics: runs in whatever dtype the inputs carry -- float64 under an
+``enable_x64`` scope (the fleet accounting convention, CPU/interpret),
+float32 on real TPU hardware (which has no f64; the jnp reference in
+``ref.py`` is the allclose oracle either way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_trapz_kernel(a_ref, b_ref, w_ref, kt_ref, kv_ref, cum_ref,
+                          o_ref, *, period: float):
+    kt = kt_ref[...]
+    kv = kv_ref[...]
+    cum = cum_ref[...]
+    total = cum[kt.shape[0] - 1]        # integral over one full period
+
+    def prefix(t):
+        """F(t) for t >= 0: whole periods times `total` plus the
+        in-period prefix read off the knot tables."""
+        k = jnp.floor(t / period)
+        p = t - k * period
+        # branchless bisect_right(kt, p) - 1: count knots <= p
+        j = jnp.sum((kt[None, :] <= p[:, None]).astype(jnp.int32), axis=1) - 1
+        j = jnp.clip(j, 0, kt.shape[0] - 2)
+        kt_j = jnp.take(kt, j)
+        kv_j = jnp.take(kv, j)
+        span = jnp.take(kt, j + 1) - kt_j
+        dt = p - kt_j
+        v_p = kv_j + (jnp.take(kv, j + 1) - kv_j) * dt \
+            / jnp.where(span > 0, span, 1.0)
+        return k * total + jnp.take(cum, j) + dt * (kv_j + v_p) * 0.5
+
+    o_ref[...] = w_ref[...] * (prefix(b_ref[...]) - prefix(a_ref[...]))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("period", "bn", "interpret"))
+def segment_trapz(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
+                  kt: jnp.ndarray, kv: jnp.ndarray, cum: jnp.ndarray, *,
+                  period: float, bn: int = 512,
+                  interpret: bool = True) -> jnp.ndarray:
+    """a, b, w: [N] segment starts/ends/weights; kt, kv, cum: [K]
+    extended knot times/values/prefix integrals covering [0, period]
+    (``CarbonTrace._kt/_kv/_cum``).  Returns [N] per-segment
+    ``w * (F(b) - F(a))``; N is padded internally to a ``bn`` multiple
+    (padding contributes exact zeros via w=0)."""
+    n = a.shape[0]
+    bn = min(bn, max(n, 1))
+    pad = (-n) % bn if n else bn
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros(pad, a.dtype)])
+        b = jnp.concatenate([b, jnp.zeros(pad, b.dtype)])
+        w = jnp.concatenate([w, jnp.zeros(pad, w.dtype)])
+    k = kt.shape[0]
+    grid = (a.shape[0] // bn,)
+    seg_spec = pl.BlockSpec((bn,), lambda i: (i,))
+    knot_spec = pl.BlockSpec((k,), lambda i: (0,))
+    kernel = functools.partial(_segment_trapz_kernel, period=float(period))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seg_spec, seg_spec, seg_spec,
+                  knot_spec, knot_spec, knot_spec],
+        out_specs=seg_spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b, w, kt, kv, cum)
+    return out[:n]

@@ -98,3 +98,81 @@ def test_rglru_carries_initial_state():
     np.testing.assert_allclose(np.asarray(h[:, 0]), 0.9, rtol=1e-5)
     np.testing.assert_allclose(np.asarray(h[:, -1]),
                                0.9 ** s, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# segment_trapz: the carbon-integration primitive of the mega-simulator's
+# jax backend (fleet/mega/jaxback.py).  Oracle chain: Pallas kernel ==
+# jnp reference == CarbonTrace.integral evaluated one segment at a time.
+# ---------------------------------------------------------------------------
+
+def _trace_tables(trace):
+    kt = np.asarray(trace._kt)
+    kv = np.asarray(trace._kv)
+    cum = np.asarray(trace._cum)
+    return kt, kv, cum
+
+
+@pytest.mark.parametrize("n", [1, 17, 512, 2001])
+@pytest.mark.parametrize("shape_name", ["solar-duck", "wind-night", "flat"])
+def test_segment_trapz_sweep(n, shape_name):
+    from jax.experimental import enable_x64
+
+    from repro.fleet.carbon import make_trace
+
+    trace = make_trace(shape_name, 0.39)
+    kt, kv, cum = _trace_tables(trace)
+    rng = np.random.default_rng(n)
+    # spans crossing knots, bins, midnight wrap, and multiple periods
+    a = np.sort(rng.uniform(0.0, 2.5 * trace.period_s, n))
+    b = a + rng.uniform(0.0, 4 * 3600.0, n)
+    w = rng.uniform(10.0, 700.0, n)
+    want = np.array([trace.integral(x, y) * z for x, y, z in zip(a, b, w)])
+    with enable_x64():
+        args = [jnp.asarray(x) for x in (a, b, w, kt, kv, cum)]
+        got_pl = np.asarray(ops.segment_trapz(
+            *args, period=trace.period_s, use_pallas=True))
+        got_ref = np.asarray(ops.segment_trapz(
+            *args, period=trace.period_s, use_pallas=False))
+    np.testing.assert_allclose(got_pl, want, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(got_ref, want, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(got_pl, got_ref, rtol=1e-12, atol=0)
+
+
+def test_segment_trapz_f32_kernel_matches_ref():
+    """TPU-realistic dtype: kernel and reference agree bit-comparably
+    in f32 (no f64 on real TPU hardware)."""
+    from repro.fleet.carbon import solar_duck
+
+    trace = solar_duck(0.39)
+    kt, kv, cum = (x.astype(np.float32) for x in _trace_tables(trace))
+    rng = np.random.default_rng(0)
+    a = np.sort(rng.uniform(0, 86400.0, 700)).astype(np.float32)
+    b = a + np.float32(50.0)
+    w = np.full(700, 300.0, np.float32)
+    args = [jnp.asarray(x) for x in (a, b, w, kt, kv, cum)]
+    got = np.asarray(ops.segment_trapz(*args, period=trace.period_s,
+                                       use_pallas=True))
+    want = np.asarray(ref.segment_trapz_ref(*args, period=trace.period_s))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_segment_trapz_zero_and_empty_segments():
+    from jax.experimental import enable_x64
+
+    from repro.fleet.carbon import solar_duck
+
+    trace = solar_duck(0.39)
+    kt, kv, cum = _trace_tables(trace)
+    with enable_x64():
+        empty = ops.segment_trapz(
+            jnp.zeros(0), jnp.zeros(0), jnp.zeros(0),
+            jnp.asarray(kt), jnp.asarray(kv), jnp.asarray(cum),
+            period=trace.period_s)
+        point = ops.segment_trapz(
+            jnp.asarray([100.0, 7e4]), jnp.asarray([100.0, 7e4]),
+            jnp.asarray([500.0, 500.0]),
+            jnp.asarray(kt), jnp.asarray(kv), jnp.asarray(cum),
+            period=trace.period_s)
+    assert np.asarray(empty).shape == (0,)
+    np.testing.assert_allclose(np.asarray(point), 0.0, atol=1e-12)

@@ -17,21 +17,40 @@ file pins that claim the way every other layer pins its anchor
 * a 500-device x 100k-request day completes, conserves requests, and
   meters non-negative energy;
 * the trace generators are seed-deterministic (same seed => the
-  bit-identical trace) and round-trip through the record schema.
+  bit-identical trace) and round-trip through the record schema --
+  as does the streaming JSON-Lines form (``FleetTrace.to_jsonl``);
+* the compiled backend (``run_mega(backend="jax")``) matches the numpy
+  anchor on fleet totals to <=1e-9 relative (and bit-for-bit on
+  requests, cold starts, power timeline, and the fsum'd latency total)
+  across the pinned day, generated days, and a property sweep of
+  random seeds x policies x generators;
+* the big-gap cache reuses derived stream arrays across runs on the
+  same trace and stays within its bounds.
 """
 import dataclasses
 import math
+import pathlib
+import sys
 
 import numpy as np
 import pytest
 
 from repro.core.scheduler import (AdaptiveBreakeven, AlwaysOn, Breakeven,
                                   Clairvoyant, FixedTTL)
-from repro.fleet import (CarbonBreakeven, MegaUnsupportedError,
-                         ReplicaAutoscaler, flash_crowd,
+from repro.fleet import (CarbonBreakeven, FleetTrace, MegaUnsupportedError,
+                         ReplicaAutoscaler, flash_crowd, make_trace,
                          mixed_fleet_scenario, product_launch,
                          regional_outage, run_fleet, run_mega, solar_duck,
                          trace_from_records)
+from repro.fleet.mega import GENERATORS
+from repro.fleet.mega.megasim import _BigGapCache, biggap_cache
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, st
+
+DATA = pathlib.Path(__file__).parent / "data"
 
 REL = 1e-9          # per-device tolerance (observed worst: ~2e-15)
 
@@ -226,3 +245,251 @@ class TestGenerators:
         rec["events"].append({"t_s": 1.0, "route": "ghost"})
         with pytest.raises(ValueError, match="unknown route"):
             trace_from_records(rec)
+
+
+class TestJsonl:
+    """Streaming JSON-Lines ingestion: lossless both ways."""
+
+    def test_fixture_round_trip(self, tmp_path):
+        tr = FleetTrace.from_jsonl(DATA / "mini_day.jsonl")
+        assert tr.name == "flash-crowd" and tr.seed == 17
+        assert tr.requests > 0
+        out = tmp_path / "again.jsonl"
+        tr.to_jsonl(out)
+        assert out.read_text() == (DATA / "mini_day.jsonl").read_text()
+
+    def test_generated_round_trip_lossless(self, tmp_path):
+        tr = flash_crowd(n_routes=3, fleet="1xh100+1xl40s", seed=17,
+                         base_rate_hr=2.0, spike_x=8.0)
+        p = tmp_path / "day.jsonl"
+        tr.to_jsonl(p)
+        back = FleetTrace.from_jsonl(p)
+        assert back.name == tr.name and back.fleet == tr.fleet
+        assert back.horizon_s == tr.horizon_s and back.seed == tr.seed
+        for ra, rb in zip(tr.routes, back.routes):
+            assert ra.route_id == rb.route_id
+            assert ra.checkpoint_gb == rb.checkpoint_gb
+            assert np.array_equal(ra.arrivals_s, rb.arrivals_s)
+        assert back.to_records() == tr.to_records()
+
+    def test_rejects_unknown_route_with_line_number(self, tmp_path):
+        p = tmp_path / "bad.jsonl"
+        flash_crowd(n_routes=2, seed=17, base_rate_hr=1.0).to_jsonl(p)
+        with open(p, "a", encoding="utf-8") as fh:
+            fh.write('{"t_s": 1.0, "route": "ghost"}\n')
+        with pytest.raises(ValueError, match="unknown route"):
+            FleetTrace.from_jsonl(p)
+
+    def test_rejects_empty_file(self, tmp_path):
+        p = tmp_path / "empty.jsonl"
+        p.write_text("")
+        with pytest.raises(ValueError, match="empty"):
+            FleetTrace.from_jsonl(p)
+
+
+class TestBigGapCache:
+    """Derived stream arrays are shared across runs, within bounds."""
+
+    def test_hit_on_same_source_array(self):
+        cache = _BigGapCache(maxsize=4)
+        src = np.array([3.0, 1.0, 2.0, 99.0])
+        a1, g1 = cache.stream_arrays(src, 10.0)
+        a2, g2 = cache.stream_arrays(src, 10.0)
+        assert a1 is a2 and g1 is g2            # shared derived objects
+        assert cache.hits == 1 and cache.misses == 1
+        assert list(a1) == [1.0, 2.0, 3.0]      # sorted, horizon-filtered
+        # a different horizon is a different derivation
+        a3, _ = cache.stream_arrays(src, 2.5)
+        assert cache.misses == 2 and list(a3) == [1.0, 2.0]
+
+    def test_lru_bound_holds(self):
+        cache = _BigGapCache(maxsize=2)
+        srcs = [np.array([float(i)]) for i in range(5)]
+        for s in srcs:
+            cache.stream_arrays(s, 10.0)
+        assert len(cache) == 2
+        cache.stream_arrays(srcs[-1], 10.0)     # newest still resident
+        assert cache.hits == 1
+
+    def test_list_source_not_cached(self):
+        cache = _BigGapCache()
+        arr, _ = cache.stream_arrays([2.0, 1.0], 10.0)   # no weakref
+        assert list(arr) == [1.0, 2.0] and len(cache) == 0
+
+    def test_repeat_runs_on_same_trace_hit(self):
+        tr = flash_crowd(n_routes=3, fleet="1xh100+1xl40s", seed=7,
+                         base_rate_hr=4.0, horizon_s=6 * 3600.0)
+        biggap_cache.clear()
+        run_mega(tr.to_scenario(Breakeven), compute_bound=False)
+        assert biggap_cache.misses == 3 and biggap_cache.hits == 0
+        run_mega(tr.to_scenario(Breakeven), compute_bound=False)
+        assert biggap_cache.hits == 3           # every stream reused
+
+    def test_biggap_dict_bounded_per_stream(self):
+        cache = _BigGapCache(max_timeouts=3)
+        src = np.arange(50, dtype=np.float64)
+        _, gaps = cache.stream_arrays(src, 100.0)
+        from repro.fleet.mega.megasim import _Stream
+        ms = _Stream("m", src, gaps)
+        import repro.fleet.mega.megasim as megasim_mod
+        old = megasim_mod.biggap_cache
+        megasim_mod.biggap_cache = cache
+        try:
+            for T in (0.5, 1.5, 2.5, 3.5, 4.5):
+                ms.biggaps(T)
+        finally:
+            megasim_mod.biggap_cache = old
+        assert len(ms.biggap) == 3              # oldest evicted
+
+
+def _jax_pair(make_scenario, **run_kw):
+    """The same scenario through both bulk backends (fresh scenarios:
+    they hold mutable per-run state)."""
+    ref = run_mega(make_scenario(), backend="numpy", **run_kw)
+    got = run_mega(make_scenario(), backend="jax", **run_kw)
+    return ref, got
+
+
+def _assert_backends_match(ref, got):
+    """The backend contract: identical structural outcomes, float totals
+    to <=1e-9 relative (energy is summed in a different order on the
+    compiled path; latency totals use fsum on an identical multiset, so
+    they are exactly equal)."""
+    assert got.requests == ref.requests
+    assert got.cold_starts == ref.cold_starts
+    assert got.power_timeline == ref.power_timeline
+    assert got.replica_timeline == ref.replica_timeline
+    assert got.added_latency_s_total == ref.added_latency_s_total
+    assert got.energy_wh == pytest.approx(ref.energy_wh, rel=REL)
+    assert got.carbon_kg == pytest.approx(ref.carbon_kg, rel=REL)
+    assert got.parking_tax_wh == pytest.approx(ref.parking_tax_wh, rel=REL)
+    for (t1, c1), (t2, c2) in zip(ref.carbon_timeline, got.carbon_timeline):
+        assert t2 == t1
+        assert c2 == pytest.approx(c1, rel=REL, abs=1e-12)
+    for rd, gd in zip(ref.devices, got.devices):
+        assert gd.requests == rd.requests
+        assert gd.cold_starts == rd.cold_starts
+        assert list(gd.energy_wh) == list(rd.energy_wh)
+        for k in rd.energy_wh:
+            assert gd.energy_wh[k] == pytest.approx(rd.energy_wh[k],
+                                                    rel=REL, abs=1e-9)
+        assert gd.carbon_kg == pytest.approx(rd.carbon_kg, rel=REL,
+                                             abs=1e-12)
+
+
+class TestJaxBackend:
+    """run_mega(backend="jax") == the numpy anchor, which == run_fleet."""
+
+    def test_pinned_day_matches_numpy(self):
+        ref, got = _jax_pair(
+            lambda: mixed_fleet_scenario(Breakeven, "warm-first", seed=100))
+        _assert_backends_match(ref, got)
+        assert np.array_equal(np.asarray(ref.latencies_s),
+                              np.asarray(got.latencies_s))
+
+    @pytest.mark.parametrize("gen", [flash_crowd, product_launch,
+                                     regional_outage],
+                             ids=["flash-crowd", "product-launch",
+                                  "regional-outage"])
+    def test_generated_days_match(self, gen):
+        tr = gen(n_routes=4, fleet="h100+a100+l40s", seed=7)
+        ref, got = _jax_pair(lambda: tr.to_scenario(Breakeven),
+                             compute_bound=False)
+        _assert_backends_match(ref, got)
+
+    def test_shaped_carbon_trace_matches(self):
+        # the carbon integral is the Pallas-kernel path's whole reason
+        # to exist; anchor it on a non-flat intensity curve
+        tr = flash_crowd(n_routes=4, fleet="h100+a100", seed=11,
+                         horizon_s=8 * 3600.0)
+        ct = make_trace("solar-duck", 0.39)
+        ref, got = _jax_pair(
+            lambda: tr.to_scenario(Breakeven, carbon_trace=ct),
+            compute_bound=False)
+        _assert_backends_match(ref, got)
+
+    def test_phase_timings_reported(self):
+        sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100)
+        res = run_mega(sc, backend="jax")
+        keys = {"biggap_s", "billing_s", "energy_s", "carbon_s",
+                "bulk_scan_s"}
+        assert set(res.phase_timings) == keys
+        assert all(v >= 0.0 for v in res.phase_timings.values())
+
+    def test_unknown_backend_rejected(self):
+        sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100)
+        with pytest.raises(ValueError, match="unknown backend"):
+            run_mega(sc, backend="torch")
+
+    def test_scope_guard_parity(self):
+        # out-of-scope scenarios refuse identically on either backend
+        sc = mixed_fleet_scenario(AdaptiveBreakeven, "warm-first", seed=100)
+        with pytest.raises(MegaUnsupportedError, match="adapts"):
+            run_mega(sc, backend="jax")
+
+    def test_clear_error_when_jax_missing(self, monkeypatch):
+        import repro.fleet.mega as mega_pkg
+        monkeypatch.delitem(sys.modules, "repro.fleet.mega.jaxback",
+                            raising=False)
+        monkeypatch.delattr(mega_pkg, "jaxback", raising=False)
+        monkeypatch.setitem(sys.modules, "jax", None)   # import -> error
+        sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100)
+        with pytest.raises(RuntimeError, match="needs jax"):
+            run_mega(sc, backend="jax")
+
+    @settings(max_examples=6)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           gen=st.sampled_from(sorted(GENERATORS)),
+           policy=st.sampled_from([Breakeven, AlwaysOn, _ttl300]))
+    def test_property_backends_agree(self, seed, gen, policy):
+        tr = GENERATORS[gen](n_routes=3, fleet="h100+l40s", seed=seed,
+                             horizon_s=6 * 3600.0)
+        ref, got = _jax_pair(lambda: tr.to_scenario(policy),
+                             compute_bound=False)
+        _assert_backends_match(ref, got)
+
+
+class TestMegaSweep:
+    """Vmapped sweep entry point: deterministic, compiled-once batches."""
+
+    def test_seeds_sweep_runs_and_is_deterministic(self):
+        from repro.fleet import run_mega_sweep
+        kw = dict(n_routes=3, fleet="h100+l40s", base_rate_hr=8.0,
+                  horizon_s=6 * 3600.0)
+        r1 = run_mega_sweep(seeds=[1, 2, 3], **kw)
+        r2 = run_mega_sweep(seeds=[1, 2, 3], **kw)
+        assert len(r1) == 3
+        assert [a.energy_wh for a in r1] == [b.energy_wh for b in r2]
+        assert [a.requests for a in r1] == [b.requests for b in r2]
+        assert all(a.phase_timings is not None for a in r1)
+        # distinct seeds produced distinct days
+        assert len({a.requests for a in r1}) > 1
+
+    def test_sweep_traces_generator_shapes(self):
+        from repro.fleet.mega import sweep_traces
+        for gen in sorted(GENERATORS):
+            trs = sweep_traces([5], generator=gen, n_routes=3,
+                               horizon_s=6 * 3600.0)
+            assert len(trs) == 1 and len(trs[0].routes) == 3
+            assert trs[0].requests > 0
+        with pytest.raises(KeyError, match="unknown sweep generator"):
+            sweep_traces([5], generator="meteor-strike")
+
+    def test_scenarios_sweep_matches_run_mega(self):
+        from repro.fleet import run_mega_sweep
+        tr = flash_crowd(n_routes=3, fleet="h100+l40s", seed=9,
+                         horizon_s=6 * 3600.0)
+        ref = run_mega(tr.to_scenario(Breakeven), backend="jax",
+                       compute_bound=False)
+        got = run_mega_sweep(scenarios=[tr.to_scenario(Breakeven)])[0]
+        assert got.energy_wh == ref.energy_wh
+        assert got.requests == ref.requests
+
+    def test_argument_validation(self):
+        from repro.fleet import run_mega_sweep
+        with pytest.raises(ValueError, match="exactly one"):
+            run_mega_sweep()
+        with pytest.raises(ValueError, match="exactly one"):
+            run_mega_sweep(scenarios=[], seeds=[1])
+        with pytest.raises(ValueError, match="need seeds"):
+            run_mega_sweep(scenarios=[], n_routes=4)
