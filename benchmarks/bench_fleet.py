@@ -169,6 +169,48 @@ def run_all(fast: bool = False, seed: int = SEED) -> None:
         kg = cg.carbon_with(trace_for_zone(zone))
         emit(f"{tag}.carbon.zone.{zone}.kg", f"{kg:.4f}")
 
+    # per-device zones + follow-the-sun: the SAME day on a geo-split
+    # fleet (each device priced on its zone's local-time trace), with
+    # zone-aware cold placement/consolidation vs the zone-blind router.
+    # The delta is what knowing WHERE (not just when) each joule is
+    # drawn buys at the same p99 budget.
+    zfleet = "h100@DEU+a100@USA+l40s@IND" if fast \
+        else "2xh100@DEU+2xa100@USA+2xl40s@IND"
+    zkw = dict(kw, fleet=zfleet, carbon_trace="zone", zone="USA")
+    print(f"   -- zones: follow-the-sun on {zfleet} --")
+    zruns = {}
+    for label, aware in (("follow-the-sun", True), ("zone-blind", False)):
+        res = run_fleet(mixed_fleet_scenario(
+            CarbonBreakeven, CarbonAwareRouter(math.inf, zone_aware=aware),
+            consolidate=Consolidator(carbon_aware=True, period_s=300.0),
+            **zkw))
+        zruns[label] = res
+        per_zone = " ".join(f"{z}={kg:.4f}"
+                            for z, kg in sorted(res.zone_carbon_kg.items()))
+        print(f"   {'zones_' + label:38s} {res.energy_wh:9.1f} {'':6s}"
+              f" {res.cold_starts:5d} {res.migrations:5d}"
+              f" {res.requests_per_s:6.3f} {res.p99_added_latency_s:7.2f}"
+              f"   {res.carbon_kg:.4f} kg [{per_zone}]")
+        emit(f"{tag}.zones.{label}.kg", f"{res.carbon_kg:.4f}")
+        emit(f"{tag}.zones.{label}.wh", f"{res.energy_wh:.1f}")
+        emit(f"{tag}.zones.{label}.p99_added_latency_s",
+             f"{res.p99_added_latency_s:.2f}")
+        emit(f"{tag}.zones.{label}.migrations", str(res.migrations))
+        emit(f"{tag}.zones.{label}.cross_zone_migrations",
+             str(res.cross_zone_migrations))
+        emit(f"{tag}.zones.{label}.transfer_wh", f"{res.transfer_wh:.2f}")
+        for z, zkg in sorted(res.zone_carbon_kg.items()):
+            emit(f"{tag}.zones.{label}.zone.{z}.kg", f"{zkg:.4f}")
+    fts, blind = zruns["follow-the-sun"], zruns["zone-blind"]
+    zd_kg = blind.carbon_kg - fts.carbon_kg
+    print(f"   -- follow-the-sun vs zone-blind: {zd_kg:+.4f} kg "
+          f"({100 * fts.carbon_savings_vs(blind):.2f}%) at p99 "
+          f"{fts.p99_added_latency_s:.1f} vs "
+          f"{blind.p99_added_latency_s:.1f} s --")
+    emit(f"{tag}.zones.delta_kg", f"{zd_kg:.4f}")
+    emit(f"{tag}.zones.delta_pct",
+         f"{100 * fts.carbon_savings_vs(blind):.2f}")
+
     # device power gating: the first mechanism that cuts BELOW p_base.
     # The consolidator's packing drains devices; gate_drained_devices
     # then puts them to SLEEP past the wake-energy breakeven, and the

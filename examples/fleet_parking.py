@@ -149,6 +149,32 @@ def main() -> None:
         for zone in sorted(MIXES))
     print(f"  {row}")
 
+    # -- per-device zones: follow-the-sun placement -----------------------
+    # geo-split the same fleet (DEU / USA / IND), price each device on
+    # its zone's LOCAL-time trace, and let the carbon-aware router +
+    # consolidator chase the solar troughs across zones.  Cross-zone
+    # migrations pay a WAN checkpoint transfer (energy + latency), so
+    # only moves that clear the carbon margin happen (docs/CARBON.md).
+    zfleet = "2xh100@DEU+2xa100@USA+2xl40s@IND"
+    zruns = {}
+    for aware in (True, False):
+        zruns[aware] = run_fleet(mixed_fleet_scenario(
+            CarbonBreakeven, CarbonAwareRouter(math.inf, zone_aware=aware),
+            consolidate=Consolidator(carbon_aware=True, period_s=300.0),
+            fleet=zfleet, carbon_trace="zone", zone="USA"))
+    print(f"\nper-device zones: follow-the-sun on {zfleet}:")
+    for name, res in (("zone-aware placement", zruns[True]),
+                      ("zone-blind placement", zruns[False])):
+        per_zone = "  ".join(f"{z} {kg:.4f}" for z, kg
+                             in sorted(res.zone_carbon_kg.items()))
+        print(f"  {name:40s} {res.carbon_kg:8.4f} kg  "
+              f"p99 {res.p99_added_latency_s:6.2f} s  [{per_zone}]")
+    z_kg = zruns[False].carbon_kg - zruns[True].carbon_kg
+    print(f"  knowing WHERE each joule is drawn saves {z_kg:+.4f} "
+          f"kgCO2e/day on top of knowing when; "
+          f"{zruns[True].cross_zone_migrations} cross-zone moves "
+          f"({zruns[True].transfer_wh:.2f} Wh WAN transfer)")
+
     # -- device power gating: opening the bare-idle floor -----------------
     # ~92% of fleet carbon is the trace-invariant p_base floor; the
     # sleep/wake state machine (core/power_states.py) is the first

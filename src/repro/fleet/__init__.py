@@ -4,14 +4,16 @@ across heterogeneous GPUs (see DESIGN in each module; docs/ARCHITECTURE.md
 maps the layers)."""
 from repro.fleet.autoscaler import (ReplicaAutoscaler, ScaleIn, ScaleOut)
 from repro.fleet.carbon import (CarbonBreakeven, CarbonTrace, TRACE_SHAPES,
-                                carbon_timeline_kg, flat_trace, make_trace,
+                                carbon_timeline_kg, carbon_timeline_multi_kg,
+                                flat_trace, make_trace, resolve_zone_trace,
                                 solar_duck, trace_for_zone, wind_night)
 from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
                                  ElectricityMix, GPUSku, above_base_load_j,
                                  build_fleet, carbon_kg, energy_cost_usd,
                                  fleet_price_usd, get_mix, get_sku,
                                  marginal_park_w, scaleout_cost_j,
-                                 wake_cost_j)
+                                 transfer_cost_j, transfer_latency_s,
+                                 wake_cost_j, zone_hops)
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
 from repro.fleet.router import (BreakevenRouter, CarbonAwareRouter,
                                 Consolidator, EnergyGreedyRouter,
@@ -20,7 +22,7 @@ from repro.fleet.router import (BreakevenRouter, CarbonAwareRouter,
 from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
                                   FleetScenario, clairvoyant_bound,
                                   mixed_fleet_scenario, run_fleet,
-                                  single_device_scenario)
+                                  single_device_scenario, zone_decomposition)
 from repro.fleet.mega import (FleetTrace, GENERATORS, MegaUnsupportedError,
                               RouteTrace, flash_crowd, product_launch,
                               regional_outage, run_mega, trace_from_records)
@@ -29,9 +31,11 @@ __all__ = [
     "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
     "build_fleet", "carbon_kg", "energy_cost_usd", "fleet_price_usd",
     "get_mix", "get_sku", "above_base_load_j", "marginal_park_w",
-    "scaleout_cost_j", "wake_cost_j",
+    "scaleout_cost_j", "transfer_cost_j", "transfer_latency_s",
+    "wake_cost_j", "zone_hops",
     "CarbonBreakeven", "CarbonTrace", "TRACE_SHAPES", "carbon_timeline_kg",
-    "flat_trace", "make_trace", "solar_duck", "trace_for_zone", "wind_night",
+    "carbon_timeline_multi_kg", "flat_trace", "make_trace",
+    "resolve_zone_trace", "solar_duck", "trace_for_zone", "wind_night",
     "ReplicaAutoscaler", "ScaleOut", "ScaleIn",
     "Cluster", "FleetModelSpec", "RateEstimator",
     "Router", "ROUTERS", "WarmFirstRouter", "LeastLoadedRouter",
@@ -39,7 +43,7 @@ __all__ = [
     "CarbonAwareRouter", "Consolidator", "Move", "get_router",
     "FleetModel", "FleetScenario", "FleetResult", "DeviceReport",
     "run_fleet", "single_device_scenario", "mixed_fleet_scenario",
-    "clairvoyant_bound",
+    "clairvoyant_bound", "zone_decomposition",
     "MegaUnsupportedError", "run_mega", "run_mega_sweep", "GENERATORS",
     "FleetTrace", "RouteTrace", "flash_crowd", "product_launch",
     "regional_outage", "trace_from_records",

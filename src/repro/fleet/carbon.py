@@ -191,6 +191,26 @@ class CarbonTrace:
                            tuple((t, v * k) for t, v in self.points),
                            self.period_s)
 
+    def shifted(self, dt_s: float) -> "CarbonTrace":
+        """Phase-shift the curve: the returned trace reads
+        ``self.intensity_at(t + dt_s)`` at time ``t`` -- how zone
+        presets authored in LOCAL hours (solar trough ~13:00 local) are
+        expressed on the fleet's shared sim clock.  A cyclic knot shift:
+        same trapezoids in a different order, so the daily mean is
+        preserved.  Identity (``self``) for flat traces or a whole-period
+        shift, keeping single-zone runs bit-exact."""
+        dt = dt_s % self.period_s
+        if dt == 0.0 or self.is_flat:
+            return self
+        pts = []
+        for t, v in self.points:
+            nt = (t - dt) % self.period_s
+            if nt >= self.period_s:         # fp guard on the mod wrap
+                nt = 0.0
+            pts.append((nt, v))
+        pts.sort()
+        return CarbonTrace(self.name, tuple(pts), self.period_s)
+
 
 # ---------------------------------------------------------------------------
 # Synthetic diurnal generators (all scaled to a target daily mean).
@@ -258,13 +278,44 @@ def make_trace(shape: str, mean_kg_per_kwh: float) -> CarbonTrace:
 
 
 def trace_for_zone(zone: str) -> CarbonTrace:
-    """The zone's preset diurnal shape at the zone's mean intensity
-    (``catalog.ElectricityMix.trace_shape`` names the shape; the daily
+    """The zone's preset diurnal shape at the zone's mean intensity,
+    phase-shifted onto the sim clock by the zone's ``tz_offset_s``
+    (``catalog.ElectricityMix`` names the shape and offset; the daily
     mean always equals ``gwp_kg_per_kwh``, so yearly totals agree with
     the scalar bookkeeping by construction)."""
     from repro.fleet.catalog import get_mix
     mix = get_mix(zone)
-    return make_trace(mix.trace_shape, mix.gwp_kg_per_kwh)
+    return make_trace(mix.trace_shape, mix.gwp_kg_per_kwh).shifted(
+        mix.tz_offset_s)
+
+
+def resolve_zone_trace(zone: str, carbon_trace=None,
+                       scenario_zone: str = None) -> CarbonTrace:
+    """THE zone->trace resolver: one owner of the zone->(trace, mean)
+    mapping (prices stay on ``catalog.get_mix``), shared by the
+    scenario-level resolution (``FleetScenario.resolved_carbon_trace``)
+    and the per-device zone binding, so the two can never disagree.
+
+    ``carbon_trace`` is the scenario-style spec:
+      * ``None``        -> flat at the zone's mean (scalar accounting);
+      * ``"zone"``      -> the zone's preset via ``trace_for_zone``;
+      * a shape name    -> ``make_trace(shape, zone mean)``;
+      * a CarbonTrace   -> as-is for the zone it was authored for (the
+                          scenario zone), repriced to the target zone's
+                          mean (shape-preserving ``scaled_to_mean``)
+                          when a device sits in a DIFFERENT zone.
+    """
+    from repro.fleet.catalog import get_mix
+    mix = get_mix(zone)
+    if carbon_trace is None:
+        return flat_trace(mix.gwp_kg_per_kwh)
+    if isinstance(carbon_trace, CarbonTrace):
+        if scenario_zone is None or get_mix(scenario_zone).zone == mix.zone:
+            return carbon_trace
+        return carbon_trace.scaled_to_mean(mix.gwp_kg_per_kwh)
+    if carbon_trace == "zone":
+        return trace_for_zone(mix.zone)
+    return make_trace(carbon_trace, mix.gwp_kg_per_kwh)
 
 
 class CarbonBreakeven:
@@ -356,13 +407,27 @@ def carbon_timeline_kg(trace: CarbonTrace,
     even when a final load burst overshoots ``end_s`` (exactly as the
     fleet energy accounting lets the final burst overshoot the horizon).
     """
+    return carbon_timeline_multi_kg([(trace, s) for s in segments],
+                                    bin_s=bin_s, end_s=end_s)
+
+
+def carbon_timeline_multi_kg(
+        traced_segments: Sequence[Tuple[CarbonTrace,
+                                        Tuple[float, float, float]]],
+        bin_s: float = 3600.0,
+        end_s: float = 0.0) -> List[Tuple[float, float]]:
+    """``carbon_timeline_kg`` with a per-segment trace: the multi-zone
+    fleet form, where each device's power segments integrate against
+    that device's zone trace.  Walks the segments in the given order
+    with the single-trace arithmetic, so a fleet whose devices all share
+    one trace object reproduces ``carbon_timeline_kg`` bit-for-bit."""
     if bin_s <= 0:
         raise ValueError("bin width must be positive")
-    last = max((b for _, b, _ in segments), default=0.0)
+    last = max((b for _, (_, b, _) in traced_segments), default=0.0)
     end = max(end_s, last)
     n = max(int(math.ceil(end / bin_s - 1e-12)), 1)
     bins = [0.0] * n
-    for a, b, p in segments:
+    for trace, (a, b, p) in traced_segments:
         if b <= a:
             continue
         j = min(int(a // bin_s), n - 1)

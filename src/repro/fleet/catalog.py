@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core import power_states
 from repro.core.impact import US_GRID_KG_CO2_PER_KWH
@@ -40,11 +40,22 @@ class ElectricityMix:
     usd_per_kwh:    industrial electricity price.
     trace_shape:    preset diurnal shape name in ``carbon.TRACE_SHAPES``
                     ("flat" / "solar-duck" / "wind-night").
+    tz_offset_s:    local-clock offset vs the fleet's shared sim clock
+                    (which is US-fleet local time, the paper's telemetry
+                    frame).  Shapes are authored in LOCAL hours (solar
+                    trough ~13:00 local); ``trace_for_zone`` phase-shifts
+                    them onto the sim clock, so zones peak and trough at
+                    different sim times -- the spread follow-the-sun
+                    placement exploits.
+    region:         coarse geographic region ("NA"/"EU"/"AS"/"GLOBAL"),
+                    used by ``zone_hops`` to price cross-zone transfers.
     """
     zone: str
     gwp_kg_per_kwh: float
     usd_per_kwh: float
     trace_shape: str = "flat"
+    tz_offset_s: float = 0.0
+    region: str = "GLOBAL"
 
 
 # The USA intensity is DERIVED from core.impact (single source of truth
@@ -53,10 +64,15 @@ class ElectricityMix:
 MIXES: Dict[str, ElectricityMix] = {
     "WOR": ElectricityMix("WOR", 0.481, 0.14),   # world average
     "USA": ElectricityMix("USA", US_GRID_KG_CO2_PER_KWH, 0.12,
-                          trace_shape="solar-duck"),
-    "DEU": ElectricityMix("DEU", 0.350, 0.26, trace_shape="solar-duck"),
-    "FRA": ElectricityMix("FRA", 0.056, 0.18),   # nuclear: near-flat
-    "SWE": ElectricityMix("SWE", 0.020, 0.10, trace_shape="wind-night"),
+                          trace_shape="solar-duck", region="NA"),
+    "DEU": ElectricityMix("DEU", 0.350, 0.26, trace_shape="solar-duck",
+                          tz_offset_s=7 * 3600.0, region="EU"),
+    "FRA": ElectricityMix("FRA", 0.056, 0.18,    # nuclear: near-flat
+                          tz_offset_s=7 * 3600.0, region="EU"),
+    "SWE": ElectricityMix("SWE", 0.020, 0.10, trace_shape="wind-night",
+                          tz_offset_s=7 * 3600.0, region="EU"),
+    "IND": ElectricityMix("IND", 0.708, 0.08, trace_shape="solar-duck",
+                          tz_offset_s=11.5 * 3600.0, region="AS"),
 }
 
 
@@ -144,24 +160,42 @@ def get_sku(key: str) -> GPUSku:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceInstance:
-    """One physical device in the fleet (SKU + stable identity)."""
+    """One physical device in the fleet (SKU + stable identity).
+
+    ``zone`` is the device's electricity zone (a ``MIXES`` key), or
+    ``None`` to inherit the scenario zone -- so single-zone fleets carry
+    no per-device zone state and every existing spec parses unchanged.
+    """
     instance_id: str
     sku: GPUSku
+    zone: Optional[str] = None
 
     @property
     def profile(self) -> DeviceProfile:
         return self.sku.profile
 
 
-_SPEC_PART = re.compile(r"^\s*(?:(\d+)\s*[xX]\s*)?([a-zA-Z0-9_\-]+)\s*$")
+_SPEC_PART = re.compile(
+    r"^\s*(?:(\d+)\s*[xX]\s*)?([a-zA-Z0-9_\-]+?)\s*(?:@\s*([a-zA-Z]+)\s*)?$")
+
+
+def _split_zone(key: str) -> tuple:
+    """Split an ``sku`` / ``sku@ZONE`` token into (sku_key, zone)."""
+    if "@" in key:
+        sku_key, _, zone = key.partition("@")
+        return sku_key.strip(), get_mix(zone.strip()).zone
+    return key, None
 
 
 def build_fleet(spec: Union[str, Sequence[str]]) -> List[DeviceInstance]:
     """Build device instances from a spec like ``"2xh100+2xa100+2xl40s"``.
 
-    Also accepts a sequence of SKU keys (one instance each).  Instance
-    ids are ``<sku>-<i>`` and are stable across runs (deterministic
-    routing tie-breaks sort on them).
+    Each part takes an optional ``@ZONE`` suffix pinning those devices
+    to an electricity zone (``"2xh100@DEU+2xa100@USA+2xl40s@IND"``);
+    zone-less parts inherit the scenario zone at run time.  Also accepts
+    a sequence of SKU keys (``"sku"`` or ``"sku@ZONE"``, one instance
+    each).  Instance ids are ``<sku>-<i>`` and are stable across runs
+    (deterministic routing tie-breaks sort on them).
     """
     if isinstance(spec, str):
         parts = [p for p in spec.split("+") if p.strip()]
@@ -173,16 +207,19 @@ def build_fleet(spec: Union[str, Sequence[str]]) -> List[DeviceInstance]:
             if not m:
                 raise ValueError(f"bad fleet spec part {part!r}")
             count = int(m.group(1) or 1)
-            expanded.extend([m.group(2)] * count)
+            token = m.group(2) + (f"@{m.group(3)}" if m.group(3) else "")
+            expanded.extend([token] * count)
     else:
         expanded = list(spec)
     counters: Dict[str, int] = {}
     out: List[DeviceInstance] = []
     for key in expanded:
-        sku = get_sku(key)
+        sku_key, zone = _split_zone(key)
+        sku = get_sku(sku_key)
         i = counters.get(sku.key, 0)
         counters[sku.key] = i + 1
-        out.append(DeviceInstance(instance_id=f"{sku.key}-{i}", sku=sku))
+        out.append(DeviceInstance(instance_id=f"{sku.key}-{i}", sku=sku,
+                                  zone=zone))
     return out
 
 
@@ -191,6 +228,40 @@ def fleet_price_usd(devices: Sequence[DeviceInstance], horizon_s: float,
     """Infrastructure (rental) cost of holding the fleet for the horizon."""
     hours = horizon_s / 3600.0
     return sum(d.sku.price_usd_per_hr(tier) for d in devices) * hours
+
+
+# ---------------------------------------------------------------------------
+# Cross-zone transfer costs (follow-the-sun placement / migration).
+# ---------------------------------------------------------------------------
+
+# Moving a checkpoint between zones is not free: the WAN transfer burns
+# network+storage energy and adds wall-clock before the load can start.
+# Both are priced per GB per "hop" -- 0 hops within a zone, 1 between
+# zones of the same region, 2 cross-region (the WOR pseudo-zone counts
+# as its own region, so it is always 2 hops from a real zone).
+XFER_J_PER_GB_HOP = 5400.0      # ~1.5 Wh/GB/hop (WAN transport estimate)
+XFER_S_PER_GB_HOP = 0.8         # ~1.25 GB/s per hop (~10 Gbit effective)
+
+
+def zone_hops(zone_a: str, zone_b: str) -> int:
+    """Transfer distance between two zones in pricing hops."""
+    a, b = get_mix(zone_a), get_mix(zone_b)
+    if a.zone == b.zone:
+        return 0
+    if a.region == b.region and a.region != "GLOBAL":
+        return 1
+    return 2
+
+
+def transfer_cost_j(checkpoint_gb: float, zone_a: str, zone_b: str) -> float:
+    """Network energy of moving ``checkpoint_gb`` between zones (J)."""
+    return XFER_J_PER_GB_HOP * checkpoint_gb * zone_hops(zone_a, zone_b)
+
+
+def transfer_latency_s(checkpoint_gb: float, zone_a: str,
+                       zone_b: str) -> float:
+    """Added wall-clock of the cross-zone checkpoint transfer (s)."""
+    return XFER_S_PER_GB_HOP * checkpoint_gb * zone_hops(zone_a, zone_b)
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.coldstart import LoaderSpec, loader_from_checkpoint
 from repro.core.power_states import PowerState, state_power_w
 from repro.core.scheduler import Policy
-from repro.fleet.catalog import DeviceInstance
+from repro.fleet.catalog import (DeviceInstance, transfer_cost_j,
+                                 transfer_latency_s)
 from repro.serving.energy import SimClock
 from repro.serving.model_manager import ManagedModel, ModelManager
 from repro.serving.slots import WAKE_CHANNEL
@@ -140,6 +141,14 @@ class Cluster:
         # (CarbonBreakeven) receive it at construction; None when the
         # cluster is driven directly (policies fall back to energy T*)
         self.carbon_trace = None
+        # per-device electricity zone + intensity trace, bound by
+        # run_fleet from the scenario's device list; empty when the
+        # cluster is driven directly (all devices price against
+        # carbon_trace and migrations never cross a zone boundary)
+        self.device_zones: Dict[str, str] = {}
+        self.device_traces: Dict[str, object] = {}
+        self.transfer_j = 0.0           # WAN checkpoint-transfer energy
+        self.cross_zone_migrations = 0
 
     # -- registry -----------------------------------------------------------
     def register_model(self, spec: FleetModelSpec) -> None:
@@ -536,10 +545,34 @@ class Cluster:
         return True
 
     # -- migration ----------------------------------------------------------
+    def device_trace(self, device_id: str):
+        """The intensity trace this device's joules are priced against:
+        its zone's trace when run_fleet bound one, else the scenario
+        trace (so single-zone runs stay on the exact same object)."""
+        return self.device_traces.get(device_id) or self.carbon_trace
+
+    def migration_transfer(self, model_id: str, src_id: str, dst_id: str
+                           ) -> Tuple[float, float]:
+        """(extra latency s, WAN energy J) of shipping model_id's
+        checkpoint from src's zone to dst's zone.  (0, 0) when the move
+        stays inside one zone, when zones are unbound, or when the spec
+        has no checkpoint size to ship."""
+        za = self.device_zones.get(src_id)
+        zb = self.device_zones.get(dst_id)
+        if za is None or zb is None or za == zb:
+            return 0.0, 0.0
+        ckpt = self.specs[model_id].checkpoint_bytes or 0
+        gb = ckpt / 1024 ** 3
+        return (transfer_latency_s(gb, za, zb), transfer_cost_j(gb, za, zb))
+
     def start_migration(self, model_id: str, src_id: str, dst_id: str
                         ) -> float:
         """Unload from src, begin the (split-phase) load on dst; returns
-        the load duration.  The caller owns scheduling finish_load."""
+        the load duration.  The caller owns scheduling finish_load.
+        Cross-zone moves ship the checkpoint over the WAN first: the
+        returned duration stretches by the transfer latency (so the
+        added cold-start delay lands in the existing p99 accounting)
+        and the transfer energy accrues to transfer_j."""
         src = self.managers[src_id]
         exported_engine = None
         m_src = src.models.get(model_id)
@@ -550,7 +583,11 @@ class Cluster:
         if dst_m.load_fn is None and exported_engine is not None:
             dst_m.engine = exported_engine
         self.migrations += 1
-        return self.start_load(dst_id, model_id)
+        xfer_s, xfer_j = self.migration_transfer(model_id, src_id, dst_id)
+        if xfer_s > 0.0 or xfer_j > 0.0:
+            self.cross_zone_migrations += 1
+            self.transfer_j += xfer_j
+        return self.start_load(dst_id, model_id) + xfer_s
 
     # -- reporting ----------------------------------------------------------
     def device_totals(self) -> Dict[str, Dict[str, float]]:

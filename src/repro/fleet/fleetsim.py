@@ -81,8 +81,9 @@ import numpy as np
 from repro.core.coldstart import loader_from_checkpoint
 from repro.core.power_states import PowerState
 from repro.fleet.autoscaler import ReplicaAutoscaler, ScaleOut
-from repro.fleet.carbon import (CarbonTrace, carbon_timeline_kg, flat_trace,
-                                make_trace, trace_for_zone)
+from repro.fleet.carbon import (CarbonTrace, carbon_timeline_kg,
+                                carbon_timeline_multi_kg,
+                                resolve_zone_trace)
 from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
@@ -134,16 +135,39 @@ class FleetScenario:
 
     def resolved_carbon_trace(self) -> CarbonTrace:
         """The intensity curve this run integrates emissions against
-        (see ``carbon_trace``); flat-at-mean when unset."""
-        ct = self.carbon_trace
-        if isinstance(ct, CarbonTrace):
-            return ct
-        mean = get_mix(self.zone).gwp_kg_per_kwh
-        if ct is None:
-            return flat_trace(mean)
-        if ct == "zone":
-            return trace_for_zone(self.zone)
-        return make_trace(ct, mean)
+        (see ``carbon_trace``); flat-at-mean when unset.  Delegates to
+        ``carbon.resolve_zone_trace`` -- the one owner of the
+        zone->(trace, mean) mapping -- so scenario-level and per-device
+        zone resolution can never disagree."""
+        return resolve_zone_trace(self.zone, self.carbon_trace)
+
+    def device_zones(self) -> Dict[str, str]:
+        """instance_id -> electricity zone: the device's own pinned zone
+        (``DeviceInstance.zone``) or the scenario zone, canonical."""
+        home = get_mix(self.zone).zone
+        return {d.instance_id: (d.zone or home) for d in self.devices}
+
+    def device_carbon_traces(self, resolved: Optional[CarbonTrace] = None
+                             ) -> Dict[str, CarbonTrace]:
+        """instance_id -> the intensity curve THAT device's joules price
+        against.  Devices in the scenario zone (or with no pinned zone)
+        get the scenario's resolved trace OBJECT -- the same floats in
+        the same order, so uniform-zone fleets reproduce the scenario-
+        zone run bit-exactly; devices pinned elsewhere resolve the same
+        ``carbon_trace`` spec against their own zone through the shared
+        resolver."""
+        base = resolved if resolved is not None \
+            else self.resolved_carbon_trace()
+        home = get_mix(self.zone).zone
+        cache: Dict[str, CarbonTrace] = {home: base}
+        out: Dict[str, CarbonTrace] = {}
+        for d in self.devices:
+            z = d.zone or home
+            if z not in cache:
+                cache[z] = resolve_zone_trace(z, self.carbon_trace,
+                                              scenario_zone=home)
+            out[d.instance_id] = cache[z]
+        return out
 
 
 @dataclasses.dataclass
@@ -157,6 +181,7 @@ class DeviceReport:
     resident: List[str]                  # models resident at horizon end
     meter_state: str                     # power state at horizon end
     carbon_kg: float = 0.0               # trace-integrated device emissions
+    zone: str = ""                       # electricity zone the device sits in
     # per-power-state seconds (same keys as energy_wh, minus "total")
     durations_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     wakes: int = 0                       # SLEEP -> BARE ramps metered
@@ -224,6 +249,18 @@ class FleetResult:
     # bulk-scan phases ("biggap_s" / "billing_s" / "energy_s" /
     # "carbon_s" and their sum "bulk_scan_s"); None for event-loop runs
     phase_timings: Optional[Dict[str, float]] = None
+    # per-zone decompositions of the global totals (one entry per zone
+    # present in the fleet; single-zone runs get a one-key dict whose
+    # value fsum-reduces to the global total)
+    zone_energy_wh: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    zone_carbon_kg: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    # cross-zone checkpoint-transfer accounting (follow-the-sun
+    # migrations): NETWORK energy, reported alongside -- not inside --
+    # energy_wh, which stays the device-meter integral
+    transfer_wh: float = 0.0
+    cross_zone_migrations: int = 0
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or
@@ -292,6 +329,15 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         sc.autoscaler.reset()
     cluster = Cluster(sc.devices)
     cluster.carbon_trace = trace      # before any replica/policy exists
+    # per-device zone plumbing: each device prices its joules (and the
+    # zone-aware router/consolidator price their candidates) against the
+    # device's OWN zone trace; single-zone fleets bind the scenario
+    # trace object everywhere, keeping them bit-exact
+    zones = sc.device_zones()
+    dev_traces = sc.device_carbon_traces(trace)
+    multi_zone = len(set(zones.values())) > 1
+    cluster.device_zones = zones
+    cluster.device_traces = dev_traces
     for fm in sc.models:
         cluster.register_model(fm.spec)
     for fm in sc.models:                      # warm starts (Table-6 style)
@@ -538,7 +584,9 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             parking_tax_wh=mm.meter.parking_tax_wh(),
             cold_starts=d_cold, requests=d_reqs,
             resident=mm.resident_ids(), meter_state=mm.meter.state.value,
-            carbon_kg=trace.carbon_for_segments(mm.meter.timeline),
+            carbon_kg=dev_traces[did].carbon_for_segments(
+                mm.meter.timeline),
+            zone=zones[did],
             durations_s=mm.meter.durations(),
             wakes=mm.meter.wakes,
             gated_wh_saved=mm.meter.gated_wh_saved()))
@@ -554,6 +602,24 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
                 state_wh[k] = state_wh.get(k, 0.0) + v
         for k, v in r.durations_s.items():
             state_s[k] = state_s.get(k, 0.0) + v
+    zone_wh, zone_kg = zone_decomposition(reports)
+    if multi_zone:
+        # dollars and the scalar bookkeeping price each zone's joules at
+        # that zone's rates; the carbon timeline integrates each
+        # device's segments against ITS trace (device order unchanged)
+        energy_usd = math.fsum(
+            energy_cost_usd(wh, get_mix(z)) for z, wh in zone_wh.items())
+        kg_flat = math.fsum(
+            carbon_kg(wh, get_mix(z)) for z, wh in zone_wh.items())
+        timeline = carbon_timeline_multi_kg(
+            [(dev_traces[did], seg) for did in sorted(cluster.devices)
+             for seg in cluster.managers[did].meter.timeline],
+            end_s=sc.horizon_s)
+    else:
+        energy_usd = energy_cost_usd(energy, mix)
+        kg_flat = carbon_kg(energy, mix)
+        timeline = carbon_timeline_kg(trace, fleet_segments,
+                                      end_s=sc.horizon_s)
     return FleetResult(
         router=router.name, horizon_s=sc.horizon_s, devices=reports,
         energy_wh=energy,
@@ -562,13 +628,15 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         added_latency_s_total=latency, migrations=cluster.migrations,
         lb_nongated_wh=lb_nongated, cv_per_model_wh=cv_sum,
         infra_usd=fleet_price_usd(sc.devices, sc.horizon_s, sc.price_tier),
-        energy_usd=energy_cost_usd(energy, mix),
+        energy_usd=energy_usd,
         carbon_kg=math.fsum(r.carbon_kg for r in reports),
-        carbon_kg_flat=carbon_kg(energy, mix),
+        carbon_kg_flat=kg_flat,
         carbon_trace_name=trace.name,
-        carbon_timeline=carbon_timeline_kg(trace, fleet_segments,
-                                           end_s=sc.horizon_s),
+        carbon_timeline=timeline,
         power_timeline=fleet_segments,
+        zone_energy_wh=zone_wh, zone_carbon_kg=zone_kg,
+        transfer_wh=cluster.transfer_j / 3600.0,
+        cross_zone_migrations=cluster.cross_zone_migrations,
         latencies_s=np.sort(np.asarray(samples, dtype=float)),
         replica_timeline={mid: list(log)
                           for mid, log in cluster.replica_log.items()},
@@ -578,6 +646,20 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         gates=cluster.gates,
         wakes=sum(r.wakes for r in reports),
         gated_wh_saved=math.fsum(r.gated_wh_saved for r in reports))
+
+
+def zone_decomposition(reports: Sequence[DeviceReport]
+                       ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Per-zone (energy_wh, carbon_kg) decompositions of a device-report
+    list.  ``fsum`` per zone, so the values are correctly rounded and
+    the decomposition sums back to the global totals regardless of
+    device order (shared by ``run_fleet`` and ``run_mega``)."""
+    zones = sorted({r.zone for r in reports})
+    wh = {z: math.fsum(r.total_wh for r in reports if r.zone == z)
+          for z in zones}
+    kg = {z: math.fsum(r.carbon_kg for r in reports if r.zone == z)
+          for z in zones}
+    return wh, kg
 
 
 # ---------------------------------------------------------------------------
@@ -649,8 +731,8 @@ def mixed_fleet_scenario(policy_factory, router, *,
                          service_model: Optional[ServiceTimeModel] = None,
                          max_batch: int = 4,
                          autoscaler: Optional[ReplicaAutoscaler] = None,
-                         carbon_trace: Union[CarbonTrace, str, None] = None
-                         ) -> FleetScenario:
+                         carbon_trace: Union[CarbonTrace, str, None] = None,
+                         zone: str = "USA") -> FleetScenario:
     """The ISSUE's reference scenario (shared by bench_fleet and the
     fleet_parking example): N models under a diurnal + bursty +
     heavy-tail + steady traffic rotation on a mixed-architecture fleet.
@@ -684,7 +766,7 @@ def mixed_fleet_scenario(policy_factory, router, *,
                          horizon_s=horizon_s, service_s=service_s,
                          service_model=service_model, max_batch=max_batch,
                          consolidator=cons, autoscaler=autoscaler,
-                         carbon_trace=carbon_trace)
+                         carbon_trace=carbon_trace, zone=zone)
 
 
 def single_device_scenario(arrivals_s: Sequence[float], policy_factory,

@@ -322,12 +322,12 @@ class _JaxBulk:
 
     # -- finalize: the compiled bulk reductions ------------------------------
     def finalize(self, segs, fleet_segments, trace: CarbonTrace,
-                 horizon: float) -> "megasim._Fin":
+                 horizon: float, dev_traces=None) -> "megasim._Fin":
         with enable_x64():
             energy_j, dur_s = self._finalize_energy()
             waits = self._finalize_billing()
             carbon_dev, timeline = self._finalize_carbon(
-                segs, fleet_segments, trace, horizon)
+                segs, fleet_segments, trace, horizon, dev_traces)
         self.t["bulk_scan_s"] = sum(self.t.values())
         return megasim._Fin(energy_j, dur_s, waits, carbon_dev, timeline,
                             dict(self.t))
@@ -368,60 +368,85 @@ class _JaxBulk:
         return waits
 
     def _finalize_carbon(self, segs, fleet_segments, trace: CarbonTrace,
-                         horizon: float):
+                         horizon: float, dev_traces=None):
         t0 = time.perf_counter()
         n = len(fleet_segments)
         if n == 0:
             self.t["carbon_s"] += time.perf_counter() - t0
             return [0.0] * self.n_dev, []
-        # fromiter over a flattened chain beats np.asarray on a
-        # millions-long list of 3-tuples by ~2.5x
-        seg = np.fromiter(itertools.chain.from_iterable(fleet_segments),
-                          dtype=np.float64, count=3 * n).reshape(n, 3)
-        a_np, b_np, w_np = seg[:, 0], seg[:, 1], seg[:, 2]
-        dev = np.repeat(np.arange(self.n_dev, dtype=np.int32),
-                        [len(s) for s in segs])
         # hourly timeline, numpy-semantics bins: they cover
         # max(horizon, last segment end), the last bin absorbing any
-        # overshoot.  Host-side prep for _carbon_fused: each segment's
-        # full integral lands in the bin of its END (``bucket``), and
-        # the (segment, boundary) STRADDLE pairs -- bounded by devices
-        # x boundaries, since a device's power segments are disjoint in
-        # time -- are expanded with one repeat/cumsum.
+        # overshoot.  Bin geometry is GLOBAL (all zones share the sim
+        # clock) even when devices integrate against different traces.
         bin_s = 3600.0
-        end = max(horizon, float(b_np.max()))
+        end = max(horizon, max(s[-1][1] for s in segs if s))
         nb = max(int(math.ceil(end / bin_s - 1e-12)), 1)
         tbr = bin_s * np.arange(1, nb)               # interior boundaries
-        k_lo = np.searchsorted(tbr, a_np, side="right")
-        bucket = np.searchsorted(tbr, b_np, side="left").astype(np.int32)
-        cnt = np.maximum(bucket - k_lo, 0)
-        total = int(cnt.sum())
-        pcap = _pow2(total, lo=1024)
-        pseg = np.zeros(pcap, dtype=np.int32)
-        pk = np.zeros(pcap, dtype=np.int32)
-        pw = np.zeros(pcap, dtype=np.float64)        # pad pairs weigh 0
-        if total:
-            ps = np.repeat(np.arange(n, dtype=np.int32), cnt)
-            starts = np.cumsum(cnt) - cnt
-            pseg[:total] = ps
-            pk[:total] = (np.arange(total) - starts[ps] + k_lo[ps])
-            pw[:total] = w_np[ps]
-        m = _pow2(n)
-        per_dev, cums = _carbon_fused(
-            jnp.asarray(_pad(a_np, m)), jnp.asarray(_pad(b_np, m)),
-            jnp.asarray(_pad(w_np, m)),              # pad weight 0
-            jnp.asarray(_pad(dev, m, 0)),
-            jnp.asarray(_pad(bucket, m, 0)),
-            jnp.asarray(pseg), jnp.asarray(pk), jnp.asarray(pw),
-            jnp.asarray(np.asarray(trace._kt)),
-            jnp.asarray(np.asarray(trace._kv)),
-            jnp.asarray(np.asarray(trace._cum)), jnp.asarray(tbr),
-            period=float(trace.period_s), n_dev=self.n_dev, nb=nb)
-        cums = np.asarray(cums)
-        timeline = [(min((j + 1) * bin_s, end), float(cums[j]))
+        # partition devices by their zone's trace object: one fused
+        # call per distinct trace, device ids group-local, timelines
+        # summed elementwise.  A single-zone fleet is one group over
+        # every device -- the exact pre-zone call.
+        if dev_traces is None or all(tr is trace for tr in dev_traces):
+            groups = [(trace, list(range(self.n_dev)))]
+        else:
+            by_trace: Dict[int, Tuple[CarbonTrace, List[int]]] = {}
+            for d, tr in enumerate(dev_traces):
+                by_trace.setdefault(id(tr), (tr, []))[1].append(d)
+            groups = list(by_trace.values())
+        per_dev_out = np.zeros(self.n_dev, dtype=np.float64)
+        cums_total = np.zeros(nb, dtype=np.float64)
+        for gtrace, gdevs in groups:
+            gsegs = [segs[d] for d in gdevs]
+            gn = sum(len(s) for s in gsegs)
+            if gn == 0:
+                continue
+            # fromiter over a flattened chain beats np.asarray on a
+            # millions-long list of 3-tuples by ~2.5x
+            seg = np.fromiter(
+                itertools.chain.from_iterable(
+                    itertools.chain.from_iterable(gsegs)),
+                dtype=np.float64, count=3 * gn).reshape(gn, 3)
+            a_np, b_np, w_np = seg[:, 0], seg[:, 1], seg[:, 2]
+            dev = np.repeat(np.arange(len(gdevs), dtype=np.int32),
+                            [len(s) for s in gsegs])
+            # host-side prep for _carbon_fused: each segment's full
+            # integral lands in the bin of its END (``bucket``), and
+            # the (segment, boundary) STRADDLE pairs -- bounded by
+            # devices x boundaries, since a device's power segments
+            # are disjoint in time -- are expanded with one
+            # repeat/cumsum.
+            k_lo = np.searchsorted(tbr, a_np, side="right")
+            bucket = np.searchsorted(tbr, b_np,
+                                     side="left").astype(np.int32)
+            cnt = np.maximum(bucket - k_lo, 0)
+            total = int(cnt.sum())
+            pcap = _pow2(total, lo=1024)
+            pseg = np.zeros(pcap, dtype=np.int32)
+            pk = np.zeros(pcap, dtype=np.int32)
+            pw = np.zeros(pcap, dtype=np.float64)    # pad pairs weigh 0
+            if total:
+                ps = np.repeat(np.arange(gn, dtype=np.int32), cnt)
+                starts = np.cumsum(cnt) - cnt
+                pseg[:total] = ps
+                pk[:total] = (np.arange(total) - starts[ps] + k_lo[ps])
+                pw[:total] = w_np[ps]
+            m = _pow2(gn)
+            per_dev, cums = _carbon_fused(
+                jnp.asarray(_pad(a_np, m)), jnp.asarray(_pad(b_np, m)),
+                jnp.asarray(_pad(w_np, m)),          # pad weight 0
+                jnp.asarray(_pad(dev, m, 0)),
+                jnp.asarray(_pad(bucket, m, 0)),
+                jnp.asarray(pseg), jnp.asarray(pk), jnp.asarray(pw),
+                jnp.asarray(np.asarray(gtrace._kt)),
+                jnp.asarray(np.asarray(gtrace._kv)),
+                jnp.asarray(np.asarray(gtrace._cum)), jnp.asarray(tbr),
+                period=float(gtrace.period_s), n_dev=len(gdevs), nb=nb)
+            per_dev_out[gdevs] = np.asarray(per_dev)
+            cums_total += np.asarray(cums)
+        timeline = [(min((j + 1) * bin_s, end), float(cums_total[j]))
                     for j in range(nb)]
         self.t["carbon_s"] += time.perf_counter() - t0
-        return list(np.asarray(per_dev)), timeline
+        return list(per_dev_out), timeline
 
 
 # ---------------------------------------------------------------------------

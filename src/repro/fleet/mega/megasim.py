@@ -58,12 +58,12 @@ import numpy as np
 from repro.core.coldstart import loader_from_checkpoint
 from repro.core.power_states import PowerState, state_power_w
 from repro.core.scheduler import Policy
-from repro.fleet.carbon import carbon_timeline_kg
+from repro.fleet.carbon import carbon_timeline_kg, carbon_timeline_multi_kg
 from repro.fleet.catalog import (carbon_kg, energy_cost_usd,
                                  fleet_price_usd, get_mix)
 from repro.fleet.cluster import _make_policy
 from repro.fleet.fleetsim import (DeviceReport, FleetResult, FleetScenario,
-                                  clairvoyant_bound)
+                                  clairvoyant_bound, zone_decomposition)
 from repro.fleet.router import WarmFirstRouter
 from repro.serving.service_model import ConstantServiceTime
 
@@ -322,13 +322,26 @@ class _NumpyBulk:
         self.t["billing_s"] += time.perf_counter() - t0
         return len(w)
 
-    def finalize(self, segs, fleet_segments, trace, horizon: float) -> _Fin:
+    def finalize(self, segs, fleet_segments, trace, horizon: float,
+                 dev_traces=None) -> _Fin:
         t0 = time.perf_counter()
         waits = np.asarray(self.waits, dtype=np.float64)
         self.t["billing_s"] += time.perf_counter() - t0
         t0 = time.perf_counter()
-        carbon_dev = [trace.carbon_for_segments(s) for s in segs]
-        timeline = carbon_timeline_kg(trace, fleet_segments, end_s=horizon)
+        if dev_traces is not None and any(tr is not trace
+                                          for tr in dev_traces):
+            # multi-zone fleet: each device integrates against its own
+            # zone's trace; the fleet timeline folds the per-device
+            # segments in the exact order fleet_segments concatenates
+            carbon_dev = [tr.carbon_for_segments(s)
+                          for tr, s in zip(dev_traces, segs)]
+            timeline = carbon_timeline_multi_kg(
+                [(tr, sg) for tr, s in zip(dev_traces, segs) for sg in s],
+                end_s=horizon)
+        else:
+            carbon_dev = [trace.carbon_for_segments(s) for s in segs]
+            timeline = carbon_timeline_kg(trace, fleet_segments,
+                                          end_s=horizon)
         self.t["carbon_s"] += time.perf_counter() - t0
         self.t["bulk_scan_s"] = sum(self.t.values())
         return _Fin(self.energy_j, self.dur_s, waits, carbon_dev, timeline,
@@ -389,6 +402,15 @@ def run_mega(scenario: FleetScenario, *,
 
     trace = sc.resolved_carbon_trace()
     horizon = float(sc.horizon_s)
+    # per-device zone bindings (tentpole): accounting-only at mega scope
+    # -- policies keep the SCENARIO trace (so the per-(model, SKU)
+    # loader/timeout cache stays valid) and warm-first routing is
+    # zone-blind, but every device's joules integrate against its own
+    # zone's intensity.  Single-zone fleets bind the same trace object
+    # everywhere, keeping the bit-exact anchor vs run_fleet.
+    zones = sc.device_zones()
+    dev_traces_by_id = sc.device_carbon_traces(trace)
+    multi_zone = len(set(zones.values())) > 1
 
     # ---- device vectors (index = rank in sorted(instance_id), so integer
     # comparisons reproduce every instance-id string tie-break) ------------
@@ -861,7 +883,9 @@ def run_mega(scenario: FleetScenario, *,
     fleet_segments: List[Tuple[float, float, float]] = []
     for d in range(N):
         fleet_segments.extend(segs[d])
-    fin = bulk.finalize(segs, fleet_segments, trace, horizon)
+    dev_trace_list = [dev_traces_by_id[did] for did in dids]
+    fin = bulk.finalize(segs, fleet_segments, trace, horizon,
+                        dev_trace_list)
     energy_j = fin.energy_j
     dur_s = fin.dur_s
 
@@ -881,6 +905,7 @@ def run_mega(scenario: FleetScenario, *,
             resident=[m for m in dev_models[d] if reps[(d, m)].resident],
             meter_state=_STATE_KEYS[state[d]],
             carbon_kg=fin.carbon_dev[d],
+            zone=zones[dids[d]],
             durations_s=durations))
 
     if compute_bound:
@@ -897,6 +922,16 @@ def run_mega(scenario: FleetScenario, *,
                 state_wh[k] = state_wh.get(k, 0.0) + v
         for k, v in r.durations_s.items():
             state_s[k] = state_s.get(k, 0.0) + v
+    zone_wh, zone_kg = zone_decomposition(reports)
+    if multi_zone:
+        # same per-zone pricing as run_fleet's multi-zone branch
+        energy_usd = math.fsum(
+            energy_cost_usd(wh, get_mix(z)) for z, wh in zone_wh.items())
+        kg_flat = math.fsum(
+            carbon_kg(wh, get_mix(z)) for z, wh in zone_wh.items())
+    else:
+        energy_usd = energy_cost_usd(energy, mix)
+        kg_flat = carbon_kg(energy, mix)
     all_lat = np.concatenate([np.zeros(n_zero), fin.waits])
     return FleetResult(
         router="warm-first", horizon_s=horizon, devices=reports,
@@ -907,12 +942,13 @@ def run_mega(scenario: FleetScenario, *,
         migrations=0,
         lb_nongated_wh=lb_nongated, cv_per_model_wh=cv_sum,
         infra_usd=fleet_price_usd(sc.devices, horizon, sc.price_tier),
-        energy_usd=energy_cost_usd(energy, mix),
+        energy_usd=energy_usd,
         carbon_kg=math.fsum(r.carbon_kg for r in reports),
-        carbon_kg_flat=carbon_kg(energy, mix),
+        carbon_kg_flat=kg_flat,
         carbon_trace_name=trace.name,
         carbon_timeline=fin.carbon_timeline,
         power_timeline=fleet_segments,
+        zone_energy_wh=zone_wh, zone_carbon_kg=zone_kg,
         latencies_s=np.sort(all_lat),
         replica_timeline={mid: list(log)
                           for mid, log in replica_log.items()},

@@ -54,10 +54,15 @@ _GB = 1024 ** 3
 
 @dataclasses.dataclass(frozen=True)
 class RouteTrace:
-    """One route's day: its arrival timestamps + model footprint."""
+    """One route's day: its arrival timestamps + model footprint.
+
+    ``zone`` optionally names the electricity zone the route's traffic
+    originates in (a ``catalog.MIXES`` key); ``to_scenario`` then homes
+    the route on that zone's devices when the inventory has any."""
     route_id: str
     arrivals_s: np.ndarray          # seconds since day start, sorted
     checkpoint_gb: float
+    zone: Optional[str] = None
 
     def __post_init__(self):
         arr = np.sort(np.asarray(self.arrivals_s, dtype=np.float64))
@@ -86,15 +91,29 @@ class FleetTrace:
         """Materialize the FleetScenario this trace replays: homes
         round-robin across the inventory, VRAM at 1.1x checkpoint (the
         ``mixed_fleet_scenario`` conventions), extra kwargs passed
-        through (e.g. ``carbon_trace=``)."""
+        through (e.g. ``carbon_trace=``).  Routes carrying a ``zone``
+        home round-robin WITHIN that zone's devices when the inventory
+        pins any there (zone-less routes keep the global round-robin)."""
         devices = build_fleet(self.fleet)
+        by_zone: Dict[str, List] = {}
+        for d in devices:
+            if d.zone is not None:
+                by_zone.setdefault(d.zone, []).append(d)
+        zone_rr: Dict[str, int] = {}
         models: List[FleetModel] = []
         for i, route in enumerate(self.routes):
+            pool = by_zone.get(route.zone) if route.zone else None
+            if pool:
+                k = zone_rr.get(route.zone, 0)
+                zone_rr[route.zone] = k + 1
+                home = pool[k % len(pool)].instance_id
+            else:
+                home = devices[i % len(devices)].instance_id
             spec = FleetModelSpec(
                 model_id=route.route_id, policy_factory=policy_factory,
                 checkpoint_bytes=int(route.checkpoint_gb * _GB),
                 vram_gb=route.checkpoint_gb * 1.1,
-                home=devices[i % len(devices)].instance_id)
+                home=home)
             models.append(FleetModel(spec, route.arrivals_s))
         return FleetScenario(devices=devices, models=models, router=router,
                              horizon_s=self.horizon_s, **kwargs)
@@ -114,7 +133,8 @@ class FleetTrace:
             "horizon_s": float(self.horizon_s),
             "seed": self.seed,
             "routes": [{"route": r.route_id,
-                        "checkpoint_gb": float(r.checkpoint_gb)}
+                        "checkpoint_gb": float(r.checkpoint_gb),
+                        **({"zone": r.zone} if r.zone else {})}
                        for r in self.routes],
         }
         with open(path, "w", encoding="utf-8") as fh:
@@ -135,30 +155,52 @@ class FleetTrace:
         """Stream a ``to_jsonl`` file back into a ``FleetTrace`` --
         line-at-a-time, appending each event to its route's buffer, so
         peak memory is the arrival arrays themselves.  Tolerant of
-        unsorted event lines (RouteTrace re-sorts); routes declared in
-        the header with no events come back zero-traffic."""
+        unsorted event lines (RouteTrace re-sorts) and of leading blank
+        lines before the header; routes declared in the header with no
+        events come back zero-traffic.  Malformed input fails with the
+        offending line number: unknown route ids, duplicate route ids
+        in the header, and missing/malformed ``t_s`` each get their own
+        ``ValueError`` (a bad timestamp is NOT an unknown route)."""
         with open(path, "r", encoding="utf-8") as fh:
+            hdr_ln = 1
             first = fh.readline()
-            if not first.strip():
+            while first and not first.strip():   # tolerate leading blanks
+                hdr_ln += 1
+                first = fh.readline()
+            if not first:
                 raise ValueError(f"{path}: empty jsonl trace")
             header = json.loads(first)
-            per_route: Dict[str, array.array] = {
-                r["route"]: array.array("d") for r in header["routes"]}
-            for ln, line in enumerate(fh, start=2):
+            per_route: Dict[str, array.array] = {}
+            for r in header["routes"]:
+                if r["route"] in per_route:
+                    raise ValueError(
+                        f"{path}:{hdr_ln}: duplicate route id "
+                        f"{r['route']!r} in header")
+                per_route[r["route"]] = array.array("d")
+            for ln, line in enumerate(fh, start=hdr_ln + 1):
                 if not line.strip():
                     continue
                 e = json.loads(line)
                 try:
-                    per_route[e["route"]].append(float(e["t_s"]))
+                    bucket = per_route[e.get("route")]
                 except KeyError:
                     raise ValueError(
                         f"{path}:{ln}: event references unknown route "
                         f"{e.get('route')!r}") from None
+                t_s = e.get("t_s")
+                if t_s is None:
+                    raise ValueError(f"{path}:{ln}: event missing 't_s'")
+                try:
+                    bucket.append(float(t_s))
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"{path}:{ln}: malformed 't_s' {t_s!r}") from None
         routes = tuple(
             RouteTrace(route_id=r["route"],
                        arrivals_s=np.frombuffer(
                            per_route[r["route"]], dtype=np.float64).copy(),
-                       checkpoint_gb=float(r["checkpoint_gb"]))
+                       checkpoint_gb=float(r["checkpoint_gb"]),
+                       zone=r.get("zone"))
             for r in header["routes"])
         return cls(name=str(header["name"]), fleet=str(header["fleet"]),
                    horizon_s=float(header["horizon_s"]), routes=routes,
@@ -178,7 +220,8 @@ class FleetTrace:
             "horizon_s": float(self.horizon_s),
             "seed": self.seed,
             "routes": [{"route": r.route_id,
-                        "checkpoint_gb": float(r.checkpoint_gb)}
+                        "checkpoint_gb": float(r.checkpoint_gb),
+                        **({"zone": r.zone} if r.zone else {})}
                        for r in self.routes],
             "events": events,
         }
@@ -199,7 +242,8 @@ def trace_from_records(records: Dict) -> FleetTrace:
         RouteTrace(route_id=r["route"],
                    arrivals_s=np.asarray(per_route[r["route"]],
                                          dtype=np.float64),
-                   checkpoint_gb=float(r["checkpoint_gb"]))
+                   checkpoint_gb=float(r["checkpoint_gb"]),
+                   zone=r.get("zone"))
         for r in records["routes"])
     return FleetTrace(name=str(records["name"]), fleet=str(records["fleet"]),
                       horizon_s=float(records["horizon_s"]), routes=routes,

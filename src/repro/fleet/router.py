@@ -313,30 +313,56 @@ class CarbonAwareRouter(SLOAwareRouter):
     (delegated exactly, so flat-trace runs are trace-identical).
 
     Args:
-      budget_s:  p99 added-latency budget (as ``SLOAwareRouter``).
-      headroom:  route against ``budget_s * headroom``.
-      trace:     ``CarbonTrace`` to price against; ``run_fleet`` binds
-                 the scenario's resolved trace automatically.
+    Per-device zones (the follow-the-sun tentpole): when the fleet
+    spans electricity zones, ``run_fleet`` binds each device's LOCAL
+    intensity trace on the cluster (``cluster.device_traces``) and the
+    score prices every candidate against its own zone's trace -- a cold
+    start during Germany's evening peak lands on the US device whose
+    solar trough is live, even though both candidates are identical
+    hardware.  ``zone_aware=False`` restores zone-blind scoring (every
+    candidate priced against the scenario trace), which is the
+    counterfactual the benchmarks compare against.  Single-zone fleets
+    bind the SAME trace object to every device, so this path is
+    bit-identical to the pre-zone scoring.
+
+    Args:
+      budget_s:   p99 added-latency budget (as ``SLOAwareRouter``).
+      headroom:   route against ``budget_s * headroom``.
+      trace:      ``CarbonTrace`` to price against; ``run_fleet`` binds
+                  the scenario's resolved trace automatically.
+      zone_aware: price candidates at their device-local intensity when
+                  the cluster carries per-device traces (default True).
     """
 
     name = "carbon-aware"
 
     def __init__(self, budget_s: float = 60.0, *, headroom: float = 1.0,
-                 trace: Optional[CarbonTrace] = None):
+                 trace: Optional[CarbonTrace] = None,
+                 zone_aware: bool = True):
         super().__init__(budget_s, headroom=headroom)
         self.carbon_trace = trace
+        self.zone_aware = zone_aware
 
     def set_carbon_trace(self, trace: CarbonTrace) -> None:
         """Bind the run's intensity trace (called by ``run_fleet``)."""
         self.carbon_trace = trace
 
     def _cold_score(self, model_id, t_s, cluster):
-        trace = self.carbon_trace
-        if trace is None or trace.is_flat:
+        base = self.carbon_trace
+        per_dev = cluster.device_traces if self.zone_aware else {}
+        # delegate to the joule score when no trace can change the
+        # ranking: none bound anywhere, or one shared flat trace (a
+        # flat trace scales every candidate by the same constant)
+        distinct = {id(t): t for t in per_dev.values()}
+        if base is not None:
+            distinct.setdefault(id(base), base)
+        traces = list(distinct.values())
+        if not traces or (len(traces) == 1 and traces[0].is_flat):
             return super()._cold_score(model_id, t_s, cluster)
         gap = cluster.rates[model_id].expected_gap_s()
 
         def score(did: str) -> Tuple[float, str]:
+            trace = per_dev.get(did) or base
             prof = cluster.devices[did].profile
             ld = cluster.loader_for(model_id, did)
             load_j = _above_base_load_j(cluster, model_id, did)
@@ -414,7 +440,13 @@ class Consolidator:
     earlier; the same migration proposed AT the peak is priced up and
     deferred -- consolidation work shifts into low-intensity windows.
     With a flat trace both sides scale by the same constant, so the
-    decisions are exactly the energy decisions.
+    decisions are exactly the energy decisions.  In a multi-zone fleet
+    each window is priced at the owning device's LOCAL trace (source
+    benefit at the source's zone, destination cost at the
+    destination's), cross-zone moves pay the WAN checkpoint-transfer
+    energy and its latency stretches the priced load window -- so
+    consolidation also drifts parked models toward cleaner grids when
+    the margin clears.
 
     Power gating (``gate_drained_devices=True``): the packing pass is
     what CREATES fully drained devices, so the same controller also
@@ -492,9 +524,16 @@ class Consolidator:
         def cap(t: float) -> float:
             return min(t, horizon)
 
-        trace = self.carbon_trace if self.carbon_aware else None
+        def trace_of(did: str):
+            """The trace pricing this device's windows in carbon mode:
+            its zone-local trace when run_fleet bound per-device traces,
+            else the scenario trace (single-zone fleets bind the same
+            object everywhere, so decisions are bit-identical)."""
+            if not self.carbon_aware:
+                return None
+            return cluster.device_traces.get(did) or self.carbon_trace
 
-        def weigh(power_w: float, t0: float, t1: float) -> float:
+        def weigh(power_w: float, t0: float, t1: float, trace) -> float:
             """One benefit/cost term: power held over [t0, t1], in
             joules -- or kgCO2e (trace-integrated) in carbon mode.
             Both sides of the margin test use the same units, so the
@@ -504,6 +543,17 @@ class Consolidator:
             if trace is None:
                 return power_w * (t1 - t0)
             return trace.carbon_kg(power_w, t0, t1)
+
+        def xfer_cost(model_id: str, src: str, dst: str, trace) -> float:
+            """WAN checkpoint-shipping energy for a cross-zone move, in
+            the margin test's units.  Its grid draw has no single zone
+            or phase, so carbon mode prices it at the destination
+            trace's daily mean (same convention as the router's
+            eventual-reload term).  Zero within one zone."""
+            _, xj = cluster.migration_transfer(model_id, src, dst)
+            if xj == 0.0 or trace is None:
+                return xj
+            return xj * trace.daily_mean_kg_per_kwh / _J_PER_KWH
 
         # per-target context window: how long its OWN residents keep the
         # step up regardless of what we pack onto it
@@ -549,15 +599,24 @@ class Consolidator:
                     if slots[dst] >= 1 and vram[dst] >= m.vram_gb:
                         assignment.append(Move(m.model_id, src, dst))
                         ld = cluster.loader_for(m.model_id, dst)
+                        dst_trace = trace_of(dst)
+                        xfer_s, _ = cluster.migration_transfer(
+                            m.model_id, src, dst)
                         t_start = dst_free[dst]
-                        t_done = t_start + ld.t_load_s
+                        # cross-zone: the checkpoint ships over the WAN
+                        # first, stretching the destination's load
+                        # window exactly as start_migration will
+                        t_done = t_start + xfer_s + ld.t_load_s
                         # above-bare load burst over its real window
                         # (joules: exactly above_base_load_j; carbon:
                         # the same watts against the trace)
                         p_above = max(
                             ld.p_load_w
                             - cluster.devices[dst].profile.p_base_w, 0.0)
-                        cost_j += weigh(p_above, t_start, t_done)
+                        cost_j += weigh(p_above, t_start, t_done,
+                                        dst_trace)
+                        cost_j += xfer_cost(m.model_id, src, dst,
+                                            dst_trace)
                         # destination-side extension: the migrated
                         # replica re-arms on dst and may hold dst's step
                         # up past its own residents' window
@@ -569,7 +628,7 @@ class Consolidator:
                         step_dst = cluster.devices[dst].profile.dvfs_step_w
                         cost_j += weigh(step_dst,
                                         cap(max(trial_win[dst], now_s)),
-                                        cap(armed_end))
+                                        cap(armed_end), dst_trace)
                         trial_win[dst] = max(trial_win[dst], armed_end)
                         slots[dst] -= 1
                         vram[dst] -= m.vram_gb
@@ -582,7 +641,8 @@ class Consolidator:
                 continue
             # realized benefit starts when the LAST resident leaves src
             benefit_j = weigh(cluster.devices[src].profile.dvfs_step_w,
-                              cap(last_start), cap(last_evict))
+                              cap(last_start), cap(last_evict),
+                              trace_of(src))
             if benefit_j >= self.margin * cost_j:
                 moves.extend(assignment)
                 drained.add(src)

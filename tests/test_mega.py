@@ -28,6 +28,7 @@ file pins that claim the way every other layer pins its anchor
   same trace and stays within its bounds.
 """
 import dataclasses
+import json
 import math
 import pathlib
 import sys
@@ -285,6 +286,68 @@ class TestJsonl:
         p.write_text("")
         with pytest.raises(ValueError, match="empty"):
             FleetTrace.from_jsonl(p)
+
+    def test_missing_t_s_not_misreported_as_unknown_route(self, tmp_path):
+        # regression: the event-parsing try block used to span the whole
+        # row, so the KeyError from a missing "t_s" was swallowed by the
+        # unknown-route handler and reported as "unknown route 'r0'"
+        p = tmp_path / "bad.jsonl"
+        flash_crowd(n_routes=2, seed=17, base_rate_hr=1.0).to_jsonl(p)
+        with open(p, "a", encoding="utf-8") as fh:
+            fh.write('{"route": "r0"}\n')
+        n_lines = sum(1 for _ in open(p, encoding="utf-8"))
+        with pytest.raises(ValueError,
+                           match=rf":{n_lines}: event missing 't_s'") as ei:
+            FleetTrace.from_jsonl(p)
+        assert "unknown route" not in str(ei.value)
+
+    def test_malformed_t_s_reports_line_number(self, tmp_path):
+        p = tmp_path / "bad.jsonl"
+        flash_crowd(n_routes=2, seed=17, base_rate_hr=1.0).to_jsonl(p)
+        with open(p, "a", encoding="utf-8") as fh:
+            fh.write('{"t_s": "noonish", "route": "r0"}\n')
+        n_lines = sum(1 for _ in open(p, encoding="utf-8"))
+        with pytest.raises(ValueError,
+                           match=rf":{n_lines}: malformed 't_s'"):
+            FleetTrace.from_jsonl(p)
+
+    def test_rejects_duplicate_route_id_in_header(self, tmp_path):
+        # regression: duplicate header route ids used to silently
+        # collapse into one bucket (last checkpoint wins, events merged)
+        hdr = {"name": "dup", "fleet": "h100", "horizon_s": 100.0,
+               "seed": None,
+               "routes": [{"route": "r0", "checkpoint_gb": 4.0},
+                          {"route": "r0", "checkpoint_gb": 9.0}]}
+        p = tmp_path / "dup.jsonl"
+        p.write_text(json.dumps(hdr) + "\n"
+                     + '{"t_s": 1.0, "route": "r0"}\n')
+        with pytest.raises(ValueError, match="duplicate route id 'r0'"):
+            FleetTrace.from_jsonl(p)
+
+    def test_leading_blank_lines_tolerated(self, tmp_path):
+        # regression: a leading blank line used to be misreported as
+        # "empty jsonl trace" (the header read was a bare readline)
+        tr = flash_crowd(n_routes=2, seed=17, base_rate_hr=1.0)
+        p = tmp_path / "day.jsonl"
+        tr.to_jsonl(p)
+        padded = tmp_path / "padded.jsonl"
+        padded.write_text("\n  \n" + p.read_text())
+        back = FleetTrace.from_jsonl(padded)
+        assert back.to_records() == tr.to_records()
+
+    def test_zone_field_round_trips(self, tmp_path):
+        tr = flash_crowd(n_routes=2, seed=17, base_rate_hr=1.0)
+        routes = tuple(
+            dataclasses.replace(r, zone="DEU" if i == 0 else None)
+            for i, r in enumerate(tr.routes))
+        tr = dataclasses.replace(tr, routes=routes)
+        p = tmp_path / "zoned.jsonl"
+        tr.to_jsonl(p)
+        back = FleetTrace.from_jsonl(p)
+        assert back.routes[0].zone == "DEU"
+        assert back.routes[1].zone is None
+        rec = trace_from_records(tr.to_records())
+        assert rec.routes[0].zone == "DEU" and rec.routes[1].zone is None
 
 
 class TestBigGapCache:
