@@ -265,6 +265,49 @@ def run_all(fast: bool = False, seed: int = SEED) -> None:
 
     _run_mega_bench(fast, seed, tag, kw)
     _run_megax_bench(fast, seed, tag)
+    _run_pareto_bench(fast, seed, tag)
+
+
+def _run_pareto_bench(fast: bool, seed: int, tag: str) -> None:
+    """`{tag}.pareto.*`: the four-objective fleet planner on the pinned
+    3-zone day -- frontier size, the best-cost and best-carbon corner
+    points, and the frontier's hypervolume against the all-on-demand
+    singleton (0 would mean no plan in the sweep beats always-buying
+    on-demand anywhere)."""
+    from repro.fleet.planner import pinned_day_axes, pinned_day_base, \
+        plan_fleet
+
+    print("   -- pareto: 4-objective fleet planner (cost/energy/carbon/"
+          "p99) --")
+    horizon = 6 * 3600.0 if fast else 24 * 3600.0
+    routers = ("warm-first", "slo-aware") if fast else \
+        ("warm-first", "slo-aware", "carbon-aware")
+    base = pinned_day_base(horizon_s=horizon, seed=seed)
+    axes = pinned_day_axes(routers=routers)
+    t0 = time.perf_counter()
+    res = plan_fleet(base, axes, backend="numpy" if fast else "jax")
+    wall = time.perf_counter() - t0
+    ref = res.reference
+    best_cost = res.best("cost_usd")
+    best_kg = res.best("carbon_kg")
+    print(f"   {len(res.points)} plans in {wall:.1f} s -> frontier "
+          f"{len(res.frontier)}, hypervolume {res.hypervolume:.4f} vs "
+          f"on-demand ${ref.cost_usd:.2f}")
+    print(f"   best cost   ${best_cost.cost_usd:8.2f} "
+          f"({1 - best_cost.cost_usd / ref.cost_usd:5.0%} under on-demand, "
+          f"p99 {best_cost.p99_s:.1f} s)  {best_cost.label()}")
+    print(f"   best carbon {best_kg.carbon_kg:9.3f} kg "
+          f"(vs {ref.carbon_kg:.3f})  {best_kg.label()}")
+    emit(f"{tag}.pareto.plans", str(len(res.points)))
+    emit(f"{tag}.pareto.wall_s", f"{wall:.2f}", us=wall * 1e6)
+    emit(f"{tag}.pareto.frontier_size", str(len(res.frontier)))
+    emit(f"{tag}.pareto.hypervolume", f"{res.hypervolume:.4f}")
+    emit(f"{tag}.pareto.best_cost_usd", f"{best_cost.cost_usd:.2f}")
+    emit(f"{tag}.pareto.best_cost_p99_s", f"{best_cost.p99_s:.2f}")
+    emit(f"{tag}.pareto.best_carbon_kg", f"{best_kg.carbon_kg:.4f}")
+    emit(f"{tag}.pareto.on_demand_cost_usd", f"{ref.cost_usd:.2f}")
+    emit(f"{tag}.pareto.cost_saving_pct",
+         f"{100 * (1 - best_cost.cost_usd / ref.cost_usd):.1f}")
 
 
 def _run_mega_bench(fast: bool, seed: int, tag: str, kw: dict) -> None:

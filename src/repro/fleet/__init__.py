@@ -7,13 +7,13 @@ from repro.fleet.carbon import (CarbonBreakeven, CarbonTrace, TRACE_SHAPES,
                                 carbon_timeline_kg, carbon_timeline_multi_kg,
                                 flat_trace, make_trace, resolve_zone_trace,
                                 solar_duck, trace_for_zone, wind_night)
-from repro.fleet.catalog import (CATALOG, MIXES, DeviceInstance,
+from repro.fleet.catalog import (CATALOG, MIXES, PRICE_TIERS, DeviceInstance,
                                  ElectricityMix, GPUSku, above_base_load_j,
                                  build_fleet, carbon_kg, energy_cost_usd,
                                  fleet_price_usd, get_mix, get_sku,
-                                 marginal_park_w, scaleout_cost_j,
-                                 transfer_cost_j, transfer_latency_s,
-                                 wake_cost_j, zone_hops)
+                                 marginal_park_w, normalize_tier,
+                                 scaleout_cost_j, transfer_cost_j,
+                                 transfer_latency_s, wake_cost_j, zone_hops)
 from repro.fleet.cluster import (Cluster, FleetModelSpec, RateEstimator)
 from repro.fleet.router import (BreakevenRouter, CarbonAwareRouter,
                                 Consolidator, EnergyGreedyRouter,
@@ -26,6 +26,12 @@ from repro.fleet.fleetsim import (DeviceReport, FleetModel, FleetResult,
 from repro.fleet.mega import (FleetTrace, GENERATORS, MegaUnsupportedError,
                               RouteTrace, flash_crowd, product_launch,
                               regional_outage, run_mega, trace_from_records)
+from repro.fleet.planner import (OBJECTIVES, PlanAxes, PlanPoint, PlanResult,
+                                 dominates, hypervolume, pareto_front,
+                                 plan_fleet)
+from repro.fleet.pricing import (UNBILLED_STATES, CostBreakdown,
+                                 PreemptionModel, Revocation, billed_seconds,
+                                 device_gpu_usd, device_tier_map, price_fleet)
 
 __all__ = [
     "CATALOG", "MIXES", "DeviceInstance", "ElectricityMix", "GPUSku",
@@ -47,6 +53,11 @@ __all__ = [
     "MegaUnsupportedError", "run_mega", "run_mega_sweep", "GENERATORS",
     "FleetTrace", "RouteTrace", "flash_crowd", "product_launch",
     "regional_outage", "trace_from_records",
+    "PRICE_TIERS", "normalize_tier", "UNBILLED_STATES", "CostBreakdown",
+    "PreemptionModel", "Revocation", "billed_seconds", "device_gpu_usd",
+    "device_tier_map", "price_fleet",
+    "OBJECTIVES", "PlanAxes", "PlanPoint", "PlanResult", "dominates",
+    "hypervolume", "pareto_front", "plan_fleet",
 ]
 
 

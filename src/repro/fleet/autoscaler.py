@@ -300,6 +300,7 @@ class ReplicaAutoscaler:
         gap = cluster.rates[mid].expected_gap_s()
         cands = [d for d in sorted(cluster.devices)
                  if d not in members
+                 and d not in cluster.revoked   # spot warning/outage
                  and self._fits_reserving(cluster, d, mid, reserved)]
         best, best_key = None, None
         trace = self._trace()

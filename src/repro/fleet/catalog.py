@@ -129,6 +129,23 @@ class GPUSku:
             raise KeyError(f"unknown price tier {tier!r}") from None
 
 
+# Purchase tiers a device can be rented under.  Billing semantics live
+# in fleet/pricing.py: on_demand and spot bill only powered-on hours
+# (SLEEP/OFF release the device), reserved bills the whole horizon;
+# spot is the only tier subject to preemption.
+PRICE_TIERS = ("on_demand", "reserved", "spot")
+
+
+def normalize_tier(tier: str) -> str:
+    """Canonicalize a price-tier name (case/dash-insensitive; KeyError
+    lists the tiers)."""
+    t = tier.lower().replace("-", "_")
+    if t not in PRICE_TIERS:
+        raise KeyError(f"unknown price tier {tier!r}; have "
+                       f"{sorted(PRICE_TIERS)}")
+    return t
+
+
 CATALOG: Dict[str, GPUSku] = {
     "h100": GPUSku("h100", get_profile("h100"), slots=8,
                    usd_per_hr=6.98, usd_per_hr_reserved=4.80,
@@ -165,10 +182,14 @@ class DeviceInstance:
     ``zone`` is the device's electricity zone (a ``MIXES`` key), or
     ``None`` to inherit the scenario zone -- so single-zone fleets carry
     no per-device zone state and every existing spec parses unchanged.
+    ``tier`` is the device's purchase tier (a ``PRICE_TIERS`` entry), or
+    ``None`` to inherit the scenario ``price_tier`` -- same inheritance
+    shape as zones, so tier-less specs parse unchanged too.
     """
     instance_id: str
     sku: GPUSku
     zone: Optional[str] = None
+    tier: Optional[str] = None
 
     @property
     def profile(self) -> DeviceProfile:
@@ -176,26 +197,33 @@ class DeviceInstance:
 
 
 _SPEC_PART = re.compile(
-    r"^\s*(?:(\d+)\s*[xX]\s*)?([a-zA-Z0-9_\-]+?)\s*(?:@\s*([a-zA-Z]+)\s*)?$")
+    r"^\s*(?:(\d+)\s*[xX]\s*)?([a-zA-Z0-9_\-]+?)\s*(?:@\s*([a-zA-Z]+)\s*)?"
+    r"(?::\s*([a-zA-Z_\-]+)\s*)?$")
 
 
-def _split_zone(key: str) -> tuple:
-    """Split an ``sku`` / ``sku@ZONE`` token into (sku_key, zone)."""
+def _split_token(key: str) -> tuple:
+    """Split an ``sku[@ZONE][:tier]`` token into (sku_key, zone, tier)."""
+    tier = None
+    if ":" in key:
+        key, _, t = key.partition(":")
+        tier = normalize_tier(t.strip())
     if "@" in key:
         sku_key, _, zone = key.partition("@")
-        return sku_key.strip(), get_mix(zone.strip()).zone
-    return key, None
+        return sku_key.strip(), get_mix(zone.strip()).zone, tier
+    return key.strip(), None, tier
 
 
 def build_fleet(spec: Union[str, Sequence[str]]) -> List[DeviceInstance]:
     """Build device instances from a spec like ``"2xh100+2xa100+2xl40s"``.
 
     Each part takes an optional ``@ZONE`` suffix pinning those devices
-    to an electricity zone (``"2xh100@DEU+2xa100@USA+2xl40s@IND"``);
-    zone-less parts inherit the scenario zone at run time.  Also accepts
-    a sequence of SKU keys (``"sku"`` or ``"sku@ZONE"``, one instance
-    each).  Instance ids are ``<sku>-<i>`` and are stable across runs
-    (deterministic routing tie-breaks sort on them).
+    to an electricity zone (``"2xh100@DEU+2xa100@USA+2xl40s@IND"``) and
+    an optional ``:tier`` suffix pinning their purchase tier
+    (``"2xh100@DEU:spot"``); zone-less / tier-less parts inherit the
+    scenario zone / price tier at run time.  Also accepts a sequence of
+    SKU keys (``"sku[@ZONE][:tier]"``, one instance each).  Instance ids
+    are ``<sku>-<i>`` and are stable across runs (deterministic routing
+    tie-breaks sort on them).
     """
     if isinstance(spec, str):
         parts = [p for p in spec.split("+") if p.strip()]
@@ -207,19 +235,21 @@ def build_fleet(spec: Union[str, Sequence[str]]) -> List[DeviceInstance]:
             if not m:
                 raise ValueError(f"bad fleet spec part {part!r}")
             count = int(m.group(1) or 1)
-            token = m.group(2) + (f"@{m.group(3)}" if m.group(3) else "")
+            token = (m.group(2)
+                     + (f"@{m.group(3)}" if m.group(3) else "")
+                     + (f":{m.group(4)}" if m.group(4) else ""))
             expanded.extend([token] * count)
     else:
         expanded = list(spec)
     counters: Dict[str, int] = {}
     out: List[DeviceInstance] = []
     for key in expanded:
-        sku_key, zone = _split_zone(key)
+        sku_key, zone, tier = _split_token(key)
         sku = get_sku(sku_key)
         i = counters.get(sku.key, 0)
         counters[sku.key] = i + 1
         out.append(DeviceInstance(instance_id=f"{sku.key}-{i}", sku=sku,
-                                  zone=zone))
+                                  zone=zone, tier=tier))
     return out
 
 

@@ -149,6 +149,13 @@ class Cluster:
         self.device_traces: Dict[str, object] = {}
         self.transfer_j = 0.0           # WAN checkpoint-transfer energy
         self.cross_zone_migrations = 0
+        # spot preemption (fleet/pricing.py): devices the provider has
+        # warned about or reclaimed.  Routers, the autoscaler, and the
+        # consolidator all treat a revoked device like a drained gate:
+        # no new placements, no migration targets.  run_fleet maintains
+        # the set from the PreemptionModel's drawn events.
+        self.revoked: set = set()
+        self.preemptions = 0            # revocations actually applied
 
     # -- registry -----------------------------------------------------------
     def register_model(self, spec: FleetModelSpec) -> None:
@@ -346,7 +353,10 @@ class Cluster:
         cannot settle the ramp's watts away mid-wake."""
         mm = self.managers[device_id]
         prof = self.devices[device_id].profile
-        if mm.meter.state is PowerState.SLEEP:
+        if mm.meter.state in (PowerState.SLEEP, PowerState.OFF):
+            # gated or revoked: the state machine owns these (wake ramp /
+            # preempt_restore); settling here would silently power the
+            # device back up
             return
         rt = self.runtime.get(device_id)
         if rt is not None and rt.loading == WAKE_CHANNEL:
@@ -375,7 +385,10 @@ class Cluster:
         steady-state quantity consolidation + gating optimize)."""
         total = 0.0
         for did, dev in self.devices.items():
-            if self.power_state(did) is PowerState.SLEEP:
+            state = self.power_state(did)
+            if state is PowerState.OFF:
+                continue                  # reclaimed: draws nothing
+            if state is PowerState.SLEEP:
                 total += dev.profile.p_sleep_w
             else:
                 total += dev.profile.idle_power_w(self.context_on(did))
@@ -489,6 +502,43 @@ class Cluster:
                 m.evict_at = math.inf     # more queued demand: stay pinned
             else:
                 mm.arm(model_id)
+
+    def cancel_serve(self, device_id: str, model_id: str,
+                     wait_s: float) -> None:
+        """Reverse ``begin_serve``'s bookkeeping for one in-flight
+        request a preemption orphaned: the request was NOT served here,
+        so its count and latency sample move with it to wherever the
+        re-dispatch lands (conservation: served == arrivals, each
+        counted exactly once).  ``latency_samples.remove`` drops the
+        first equal value -- samples are a multiset, so any equal
+        entry is the same observation.  Pins are left alone: the caller
+        follows with ``force_off``, whose ``fail()`` zeroes them."""
+        m = self.managers[device_id].models[model_id]
+        m.requests -= 1
+        m.added_latency_s -= wait_s
+        m.latency_samples.remove(wait_s)
+
+    # -- spot preemption (fleet/pricing.py draws; run_fleet replays) ---------
+    def force_off(self, device_id: str) -> None:
+        """Provider reclaims the device NOW: every resident/loading
+        replica is dropped instantly (``ModelManager.fail`` -- no
+        orderly unload, the weights are just gone) and the meter lands
+        at OFF (0 W; OFF seconds are unbilled for usage tiers).  The
+        caller has already collected orphaned requests via
+        ``cancel_serve`` -- fail() zeroes pins, so cancel must run
+        first."""
+        mm = self.managers[device_id]
+        mm.fail()
+        mm.meter.transition(PowerState.OFF)
+        self.revoked.add(device_id)
+        self.preemptions += 1
+
+    def restore_device(self, device_id: str) -> None:
+        """The outage ends: the device returns, cold and empty, at
+        BARE, and leaves the revoked set so placement can use it
+        again."""
+        self.managers[device_id].meter.transition(PowerState.BARE)
+        self.revoked.discard(device_id)
 
     def preview_timeout_s(self, model_id: str, device_id: str,
                           now_s: float) -> float:

@@ -87,6 +87,8 @@ from repro.fleet.carbon import (CarbonTrace, carbon_timeline_kg,
 from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
+from repro.fleet.pricing import (PreemptionModel, device_tier_map,
+                                 price_fleet)
 from repro.fleet.router import Consolidator, Router, get_router
 from repro.serving.service_model import ConstantServiceTime, ServiceTimeModel
 from repro.serving.slots import DeviceRuntime, WAKE_CHANNEL
@@ -94,8 +96,11 @@ from repro.serving.slots import DeviceRuntime, WAKE_CHANNEL
 DAY = 24 * 3600.0
 
 # event phases at equal timestamps:
-# completions < autoscale < consolidation < arrivals
-_P_DONE, _P_AUTO, _P_CONS, _P_ARR = 0, 1, 2, 3
+# completions < autoscale < consolidation < arrivals < faults
+# (faults LAST so a preemption landing exactly at an arrival orphans
+# that request like any other in-flight work; phases 0-3 are unchanged,
+# keeping zero-preemption runs event-order identical to before)
+_P_DONE, _P_AUTO, _P_CONS, _P_ARR, _P_FAULT = 0, 1, 2, 3, 4
 
 
 @dataclasses.dataclass
@@ -129,6 +134,11 @@ class FleetScenario:
     #   a shape name  -> that shape at the zone's mean ("solar-duck", ..)
     #   a CarbonTrace -> used as-is
     carbon_trace: Union[CarbonTrace, str, None] = None
+    # spot preemption (fleet/pricing.py): None -> no faults (every
+    # existing scenario replays bit-exactly); a PreemptionModel draws
+    # seeded revocations for the fleet's spot-tier devices, which the
+    # event loop replays as warn/off/restore faults
+    preemptions: Optional[PreemptionModel] = None
 
     def resolved_service_model(self) -> ServiceTimeModel:
         return self.service_model or ConstantServiceTime(self.service_s)
@@ -146,6 +156,12 @@ class FleetScenario:
         (``DeviceInstance.zone``) or the scenario zone, canonical."""
         home = get_mix(self.zone).zone
         return {d.instance_id: (d.zone or home) for d in self.devices}
+
+    def device_tiers(self) -> Dict[str, str]:
+        """instance_id -> purchase tier: the device's own pinned tier
+        (``DeviceInstance.tier``) or the scenario ``price_tier`` --
+        the tier shape of ``device_zones``."""
+        return device_tier_map(self.devices, self.price_tier)
 
     def device_carbon_traces(self, resolved: Optional[CarbonTrace] = None
                              ) -> Dict[str, CarbonTrace]:
@@ -261,6 +277,24 @@ class FleetResult:
     # energy_wh, which stays the device-meter integral
     transfer_wh: float = 0.0
     cross_zone_migrations: int = 0
+    # dollar accounting (fleet/pricing.py): cost_usd = gpu_hours_usd +
+    # energy_usd exactly.  gpu_hours_usd bills each device's metered
+    # power-state seconds at its tier rate (SLEEP/OFF unbilled except
+    # reserved) -- unlike the legacy infra_usd flat quote above, which
+    # stays as the hold-the-whole-fleet-on-demand reference.  The
+    # per-device / per-zone dicts fsum back to the totals (1e-12 rel,
+    # property-tested) and match across all three engines to 1e-9 rel.
+    cost_usd: float = 0.0
+    gpu_hours_usd: float = 0.0
+    device_gpu_usd: Dict[str, float] = dataclasses.field(default_factory=dict)
+    device_cost_usd: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+    zone_cost_usd: Dict[str, float] = dataclasses.field(default_factory=dict)
+    device_tiers: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # spot preemption: revocations applied and requests orphaned by them
+    # that were re-queued elsewhere (conservation: none are dropped)
+    preemptions: int = 0
+    requeued_requests: int = 0
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or
@@ -374,9 +408,34 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     if sc.autoscaler is not None and sc.autoscaler.tick_s < sc.horizon_s:
         push(sc.autoscaler.tick_s, _P_AUTO, "autoscale", ())
 
+    # spot preemption: the model's draw is pure data, replayed here as
+    # warn/off/restore faults.  No preemption model (or a draw with no
+    # events) pushes nothing -- the heap, and the run, are bit-identical
+    # to before the fault path existed.
+    tiers = sc.device_tiers()
+    revocations = (sc.preemptions.draw(sc.devices, tiers, sc.horizon_s)
+                   if sc.preemptions is not None else [])
+    for rv in revocations:
+        if rv.warn_at_s < rv.off_at_s:
+            push(rv.warn_at_s, _P_FAULT, "preempt_warn", (rv.device_id,))
+        push(rv.off_at_s, _P_FAULT, "preempt_off", (rv.device_id,))
+        if math.isfinite(rv.restore_at_s) and rv.restore_at_s < sc.horizon_s:
+            push(rv.restore_at_s, _P_FAULT, "preempt_restore",
+                 (rv.device_id,))
+
     rt = {did: DeviceRuntime(sc.max_batch) for did in cluster.devices}
     cluster.attach_runtime(rt, svc)
     cluster.snapshot_replicas(0.0)            # timeline origin (prewarms)
+
+    # preemption bookkeeping: each device's fault epoch (completion
+    # events carry the epoch they were scheduled under; a preempt_off
+    # bumps it, orphaning every outstanding serve/load/wake completion),
+    # and the in-flight request registry the OFF handler collects for
+    # re-dispatch -- (model, slot) -> (arrival time, charged wait)
+    epoch = {did: 0 for did in cluster.devices}
+    inflight: Dict[str, Dict[Tuple[str, int], Tuple[float, float]]] = \
+        {did: {} for did in cluster.devices}
+    requeued = 0
 
     def begin_request(did: str, mid: str, arrival_t: float,
                       now: float) -> None:
@@ -392,7 +451,9 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             cluster.end_serve(did, mid)      # instantaneous, slot-free
             return
         slot = r.pool(mid).acquire()
-        push(now + svc_s, _P_DONE, "serve_done", (did, mid, slot))
+        inflight[did][(mid, slot)] = (arrival_t, max(now - arrival_t, 0.0))
+        push(now + svc_s, _P_DONE, "serve_done", (did, mid, slot,
+                                                  epoch[did]))
 
     def drain_waiting(did: str, mid: str, now: float) -> None:
         """Admit waiters into free decode slots, oldest first."""
@@ -424,12 +485,14 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         ingest weights on a sleeping device -- the state machine would
         raise), and the queued loads start when the wake lands."""
         r = rt[did]
+        if cluster.power_state(did) is PowerState.OFF:
+            return      # revoked: queued work waits for preempt_restore
         if (r.loading is None and r.load_q
                 and cluster.power_state(did) is PowerState.SLEEP):
             dt = cluster.start_wake(did)
             r.loading = WAKE_CHANNEL
             r.loading_until = now + dt
-            push(now + dt, _P_DONE, "wake_done", (did,))
+            push(now + dt, _P_DONE, "wake_done", (did, epoch[did]))
             return
         while r.loading is None and r.load_q:
             item = r.load_q.popleft()
@@ -468,10 +531,13 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
                 cluster.sync_power(src)
             r.loading = mid
             r.loading_until = now + dt
-            push(now + dt, _P_DONE, "load_done", (did, mid))
+            push(now + dt, _P_DONE, "load_done", (did, mid, epoch[did]))
 
     while heap:
         t, _phase, _s, kind, data = heapq.heappop(heap)
+        if (kind in ("serve_done", "load_done", "wake_done")
+                and data[-1] != epoch[data[0]]):
+            continue      # orphaned by a preemption; device was reset
         cluster.advance_to(t)
         if kind == "arrival":
             (mid,) = data
@@ -487,13 +553,13 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             dispatch(did, mid, t, t)
             cluster.sync_power(did)
         elif kind == "wake_done":
-            (did,) = data
+            did, _ep = data
             rt[did].loading = None
             cluster.finish_wake(did)
             pump_loader(did, t)              # start the queued loads
             cluster.sync_power(did)
         elif kind == "load_done":
-            did, mid = data
+            did, mid, _ep = data
             r = rt[did]
             cluster.finish_load(did, mid)
             r.loading = None
@@ -505,7 +571,8 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             pump_loader(did, t)
             cluster.sync_power(did)
         elif kind == "serve_done":
-            did, mid, slot = data
+            did, mid, slot, _ep = data
+            inflight[did].pop((mid, slot), None)
             rt[did].pool(mid).release(slot)
             cluster.end_serve(did, mid)
             drain_waiting(did, mid, t)
@@ -554,6 +621,48 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             nxt = t + sc.consolidator.period_s
             if nxt < sc.horizon_s:
                 push(nxt, _P_CONS, "consolidate", ())
+        elif kind == "preempt_warn":
+            # provider warning: stop placing on the device (routers,
+            # autoscaler, consolidator targets all skip revoked ids);
+            # in-flight work rides out the warning window
+            (did,) = data
+            cluster.revoked.add(did)
+        elif kind == "preempt_off":
+            (did,) = data
+            cluster.revoked.add(did)
+            epoch[did] += 1           # orphan outstanding completions
+            r = rt[did]
+            # collect every request the revocation strands, oldest
+            # first: wait-queue entries (never started) keep their
+            # arrival time; in-flight serves are cancelled -- their
+            # count and charged wait move with them (conservation),
+            # and the re-dispatch re-charges the full wait including
+            # the preemption delay
+            orphans: List[Tuple[float, str]] = []
+            for mid in sorted(r._waiting):
+                for arr_t in r._waiting[mid]:
+                    orphans.append((arr_t, mid))
+            for (mid, slot), (arr_t, wait) in sorted(inflight[did].items()):
+                cluster.cancel_serve(did, mid, wait)
+                orphans.append((arr_t, mid))
+            inflight[did] = {}
+            cluster.force_off(did)    # drops residents, meter -> OFF
+            rt[did] = DeviceRuntime(sc.max_batch)   # queues/slots die too
+            for arr_t, mid in sorted(orphans):
+                ndid = router.choose(mid, t, cluster)
+                # re-placement, not a new arrival: rates were already
+                # observed at the true arrival -- just pin and dispatch
+                rep = cluster.replica(ndid, mid)
+                rep.pins += 1
+                rep.evict_at = math.inf
+                dispatch(ndid, mid, arr_t, t)
+                cluster.sync_power(ndid)
+                requeued += 1
+        elif kind == "preempt_restore":
+            (did,) = data
+            cluster.restore_device(did)       # OFF -> BARE, placeable
+            pump_loader(did, t)               # work queued mid-outage
+            cluster.sync_power(did)
         if kind != "serve_done":      # serving never changes residency
             cluster.snapshot_replicas(t)
 
@@ -620,6 +729,8 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         kg_flat = carbon_kg(energy, mix)
         timeline = carbon_timeline_kg(trace, fleet_segments,
                                       end_s=sc.horizon_s)
+    cost = price_fleet(sc.devices, reports, default_tier=sc.price_tier,
+                       energy_usd=energy_usd)
     return FleetResult(
         router=router.name, horizon_s=sc.horizon_s, devices=reports,
         energy_wh=energy,
@@ -645,7 +756,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         state_energy_wh=state_wh, state_durations_s=state_s,
         gates=cluster.gates,
         wakes=sum(r.wakes for r in reports),
-        gated_wh_saved=math.fsum(r.gated_wh_saved for r in reports))
+        gated_wh_saved=math.fsum(r.gated_wh_saved for r in reports),
+        cost_usd=cost.cost_usd, gpu_hours_usd=cost.gpu_hours_usd,
+        device_gpu_usd=cost.device_gpu_usd,
+        device_cost_usd=cost.device_cost_usd,
+        zone_cost_usd=cost.zone_cost_usd, device_tiers=cost.device_tiers,
+        preemptions=cluster.preemptions, requeued_requests=requeued)
 
 
 def zone_decomposition(reports: Sequence[DeviceReport]

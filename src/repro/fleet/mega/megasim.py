@@ -64,6 +64,7 @@ from repro.fleet.catalog import (carbon_kg, energy_cost_usd,
 from repro.fleet.cluster import _make_policy
 from repro.fleet.fleetsim import (DeviceReport, FleetResult, FleetScenario,
                                   clairvoyant_bound, zone_decomposition)
+from repro.fleet.pricing import price_fleet
 from repro.fleet.router import WarmFirstRouter
 from repro.serving.service_model import ConstantServiceTime
 
@@ -397,6 +398,14 @@ def run_mega(scenario: FleetScenario, *,
         raise MegaUnsupportedError(
             "run_mega supports the zero-service-time convention only "
             f"(got {getattr(svc, 'name', svc)!r})")
+    if sc.preemptions is not None and sc.preemptions.draw(
+            sc.devices, sc.device_tiers(), sc.horizon_s):
+        # guard on the DRAW, not the model: an all-on-demand plan under
+        # a preemption model has no revocable devices and replays
+        # exactly -- only actual fault events exceed the mega scope
+        raise MegaUnsupportedError(
+            "run_mega does not support spot preemption faults; "
+            "fall back to run_fleet")
     if not sc.devices:
         raise ValueError("empty fleet")
 
@@ -932,6 +941,8 @@ def run_mega(scenario: FleetScenario, *,
     else:
         energy_usd = energy_cost_usd(energy, mix)
         kg_flat = carbon_kg(energy, mix)
+    cost = price_fleet(sc.devices, reports, default_tier=sc.price_tier,
+                       energy_usd=energy_usd)
     all_lat = np.concatenate([np.zeros(n_zero), fin.waits])
     return FleetResult(
         router="warm-first", horizon_s=horizon, devices=reports,
@@ -953,4 +964,8 @@ def run_mega(scenario: FleetScenario, *,
         replica_timeline={mid: list(log)
                           for mid, log in replica_log.items()},
         state_energy_wh=state_wh, state_durations_s=state_s,
-        phase_timings=fin.timings)
+        phase_timings=fin.timings,
+        cost_usd=cost.cost_usd, gpu_hours_usd=cost.gpu_hours_usd,
+        device_gpu_usd=cost.device_gpu_usd,
+        device_cost_usd=cost.device_cost_usd,
+        zone_cost_usd=cost.zone_cost_usd, device_tiers=cost.device_tiers)

@@ -87,9 +87,16 @@ class Router:
 
     # -- shared helpers -----------------------------------------------------
     def _placeable(self, model_id: str, cluster: Cluster) -> List[str]:
-        fits = [did for did in sorted(cluster.devices)
-                if cluster.fits(did, model_id)]
-        return fits or sorted(cluster.devices)   # overflow: best effort
+        """Placement candidates: devices that fit, revoked ones (spot
+        warning/outage in force) excluded.  Best-effort fallbacks relax
+        fit before they relax revocation -- only an all-revoked fleet
+        places on a revoked device (requests must route SOMEWHERE for
+        the conservation invariant; they will be orphaned and re-queued
+        when the OFF lands)."""
+        alive = [did for did in sorted(cluster.devices)
+                 if did not in cluster.revoked]
+        fits = [did for did in alive if cluster.fits(did, model_id)]
+        return fits or alive or sorted(cluster.devices)   # best effort
 
     def _least_loaded(self, model_id: str, cluster: Cluster) -> str:
         return min(self._placeable(model_id, cluster),
@@ -106,6 +113,10 @@ class Router:
         outranks a resident replica with free capacity (requests would
         otherwise park behind the load residual)."""
         locs = cluster.locations(model_id, include_loading=True)
+        # a warm replica on a revoked device is about to vanish: do not
+        # route new work there (unless it is the only copy anywhere)
+        live = [d for d in locs if d not in cluster.revoked]
+        locs = live or locs
         if not locs:
             return None
 
@@ -280,6 +291,10 @@ class SLOAwareRouter(Router):
         pending = set(cluster.pending_scaleouts(model_id))
         cands = sorted(set(self._placeable(model_id, cluster))
                        | warm | pending)
+        # spot warning/outage: drop revoked candidates (their warmth or
+        # pending capacity is about to vanish) unless nothing else is up
+        live = [d for d in cands if d not in cluster.revoked]
+        cands = live or cands
         est = {d: self.estimated_wait_s(model_id, d, t_s, cluster)
                for d in cands}
         budget = self.budget_s * self.headroom
@@ -579,7 +594,12 @@ class Consolidator:
             # counterfactual: src pays its step until the last armed
             # timeout fires (capped so always-on compares finitely)
             last_evict = max(m.evict_at for m in residents)
-            targets = [did for did in sorted(on - drained - {src})
+            # revoked devices (spot warning/outage) are never packing
+            # targets -- capacity about to vanish, same as a drained
+            # gate -- but a revoked SOURCE may still drain: moving its
+            # residents out before the OFF lands is pure win
+            targets = [did for did in
+                       sorted(on - drained - {src} - cluster.revoked)
                        if not busy.get(did)]
             assignment: List[Move] = []
             cost_j = 0.0
@@ -662,8 +682,8 @@ class Consolidator:
         busy = busy or {}
         out: List[str] = []
         for did in sorted(cluster.devices):
-            if busy.get(did):
-                continue
+            if busy.get(did) or did in cluster.revoked:
+                continue       # revoked: about to go OFF, gating is moot
             if cluster.power_state(did) is not PowerState.BARE:
                 continue
             if cluster.occupancy(did) > 0:

@@ -41,8 +41,9 @@ try:
 except ImportError:
     from _hypothesis_shim import given, settings, st
 
-ZONES3 = "2xh100@DEU+2xa100@USA+2xl40s@IND"
-P99_BOUND_S = 120.0          # pinned added-latency bound, 3-zone day
+# pinned 3-zone fleet spec, seed, and latency bound live in conftest.py
+# (shared with test_mega / test_pricing)
+from conftest import P99_BOUND_S, PIN_SEED, ZONES3
 
 
 class TestSpecParsing:
@@ -216,7 +217,7 @@ class TestUniformZoneEquivalence:
     @pytest.mark.parametrize("runner", ["fleet", "mega-numpy", "mega-jax"])
     def test_pinned_day_bit_exact(self, runner):
         def go(fleet):
-            sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100,
+            sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=PIN_SEED,
                                       fleet=fleet, zone="DEU",
                                       carbon_trace="zone")
             if runner == "fleet":
@@ -242,7 +243,7 @@ class TestUniformZoneEquivalence:
         # warm-first routing is zone-blind, so the mega scope covers the
         # multi-zone day too: per-zone accounting must agree
         def go(runner):
-            sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100,
+            sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=PIN_SEED,
                                       fleet=ZONES3, carbon_trace="zone")
             return run_fleet(sc) if runner == "fleet" \
                 else run_mega(sc, backend=runner)
@@ -271,7 +272,7 @@ class TestZoneDecomposition:
     @given(zones=st.lists(st.sampled_from(sorted(MIXES)),
                           min_size=6, max_size=6))
     def test_decomposition_sums_to_totals(self, zones):
-        sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=100,
+        sc = mixed_fleet_scenario(Breakeven, "warm-first", seed=PIN_SEED,
                                   horizon_s=6 * 3600.0,
                                   carbon_trace="zone")
         sc.devices[:] = [dataclasses.replace(d, zone=z)
@@ -316,7 +317,7 @@ class TestFollowTheSun:
         sc = mixed_fleet_scenario(
             Breakeven, CarbonAwareRouter(math.inf, zone_aware=zone_aware),
             consolidate=Consolidator(carbon_aware=True, period_s=300.0),
-            fleet=ZONES3, seed=100, carbon_trace="zone", zone="USA")
+            fleet=ZONES3, seed=PIN_SEED, carbon_trace="zone", zone="USA")
         return run_fleet(sc)
 
     def test_zone_aware_beats_zone_blind_at_p99_bound(self):
@@ -336,7 +337,7 @@ class TestFollowTheSun:
         sc = mixed_fleet_scenario(
             Breakeven, CarbonAwareRouter(math.inf),
             consolidate=Consolidator(carbon_aware=True, period_s=300.0),
-            seed=100, carbon_trace="solar-duck")
+            seed=PIN_SEED, carbon_trace="solar-duck")
         one = run_fleet(sc)
         assert one.cross_zone_migrations == 0
         assert one.transfer_wh == 0.0
