@@ -266,6 +266,35 @@ def run_all(fast: bool = False, seed: int = SEED) -> None:
     _run_mega_bench(fast, seed, tag, kw)
     _run_megax_bench(fast, seed, tag)
     _run_pareto_bench(fast, seed, tag)
+    _run_plan_bench(fast, seed, tag)
+
+
+def _run_plan_bench(fast: bool, seed: int, tag: str) -> None:
+    """`{tag}.plan.*`: batched vs serial plan_fleet on the 27-point
+    tier grid (3 fleets x 3 routers x 3 default tiers of the pinned
+    3-zone day) -- wall-clock both ways, throughput, simulation and
+    compile counts, and the identity check the batched mode promises
+    (point-for-point equal frontiers)."""
+    from benchmarks.plan_compare import compare
+
+    print("   -- plan: batched vs serial sweep execution --")
+    doc = compare(fast=fast, seed=seed)
+    print(f"   {doc['points']} plans: serial {doc['serial']['wall_s']:.2f} s "
+          f"({doc['serial']['sims']} sims) vs batched "
+          f"{doc['batched']['wall_s']:.2f} s ({doc['batched']['sims']} sims)"
+          f" -> {doc['speedup_x']:.2f}x, "
+          f"{doc['points_per_s']:.1f} points/s, identical="
+          f"{doc['identical']}")
+    emit(f"{tag}.plan.points", str(doc["points"]))
+    emit(f"{tag}.plan.serial_s", f"{doc['serial']['wall_s']:.2f}",
+         us=doc["serial"]["wall_s"] * 1e6)
+    emit(f"{tag}.plan.batched_s", f"{doc['batched']['wall_s']:.2f}",
+         us=doc["batched"]["wall_s"] * 1e6)
+    emit(f"{tag}.plan.speedup_x", f"{doc['speedup_x']:.2f}")
+    emit(f"{tag}.plan.points_per_s", f"{doc['points_per_s']:.1f}")
+    emit(f"{tag}.plan.sims", str(doc["batched"]["sims"]))
+    emit(f"{tag}.plan.compiles", str(doc["warmup"]["compiles"]))
+    emit(f"{tag}.plan.identical", str(doc["identical"]))
 
 
 def _run_pareto_bench(fast: bool, seed: int, tag: str) -> None:

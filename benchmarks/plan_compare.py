@@ -1,0 +1,83 @@
+"""Serial-vs-batched planner timing comparison (the nightly artifact).
+
+Runs the 27-point tier grid of the pinned 3-zone day (3 fleets x 3
+routers x 3 default purchase tiers) through ``plan_fleet`` twice --
+``batched=False`` and ``batched=True`` -- verifies the frontiers are
+point-for-point identical, and reports both legs' wall-clock,
+simulation counts, and fresh-compile counts as one JSON document.
+
+Run:  PYTHONPATH=src python -m benchmarks.plan_compare [--fast]
+
+--fast shrinks the day to 6 h and uses the numpy backend (the CI smoke
+shape); the default is the full 24 h day on the jax backend, with one
+untimed warm-up sweep so the comparison measures steady state and the
+warm-up's compile count is reported separately.  The nightly CI lane
+redirects stdout to ``plan-timings.json`` and uploads it; the
+committed baseline is ``BENCH_plan.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.fleet.planner import (PlanAxes, SPOT_ALL_FLEET,
+                                 SPOT_H100_FLEET, ZONES3_FLEET,
+                                 pinned_day_base, plan_fleet)
+
+
+def _grid_axes() -> PlanAxes:
+    return PlanAxes(
+        fleets=(ZONES3_FLEET, SPOT_H100_FLEET, SPOT_ALL_FLEET),
+        routers=("warm-first", "slo-aware", "carbon-aware"),
+        price_tiers=("on_demand", "reserved", "spot"))
+
+
+def compare(fast: bool = False, seed: int = 100) -> dict:
+    horizon_s = 6 * 3600.0 if fast else 24 * 3600.0
+    backend = "numpy" if fast else "jax"
+    base = pinned_day_base(horizon_s=horizon_s, seed=seed)
+    axes = _grid_axes()
+
+    warm = plan_fleet(base, axes, backend=backend, batched=True)
+    serial = plan_fleet(base, axes, backend=backend, batched=False)
+    batched = plan_fleet(base, axes, backend=backend, batched=True)
+
+    identical = bool(
+        len(serial.points) == len(batched.points)
+        and all(a.objectives() == b.objectives() and a.engine == b.engine
+                for a, b in zip(serial.points, batched.points))
+        and serial.hypervolume == batched.hypervolume)
+
+    def leg(res) -> dict:
+        return {"wall_s": round(res.stats["wall_s"], 4),
+                "sims": res.stats["sims"],
+                "compiles": res.stats["compiles"]}
+
+    return {
+        "bench": "fleet.plan",
+        "horizon_h": horizon_s / 3600.0,
+        "backend": backend,
+        "points": len(batched.points),
+        "warmup": leg(warm),
+        "serial": leg(serial),
+        "batched": leg(batched),
+        "speedup_x": round(serial.stats["wall_s"]
+                           / batched.stats["wall_s"], 3),
+        "points_per_s": round(len(batched.points)
+                              / batched.stats["wall_s"], 2),
+        "identical": identical,
+        "hypervolume": float(batched.hypervolume),
+        "frontier_size": len(batched.frontier),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="6 h horizon + numpy backend (CI smoke shape)")
+    args = ap.parse_args()
+    print(json.dumps(compare(fast=args.fast), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -129,8 +129,11 @@ class Cluster:
         self.migrations = 0
         self.gates = 0          # devices put to SLEEP (power gating)
         # per-route warm-replica-count timeline: (t_s, count) appended
-        # whenever snapshot_replicas observes a change
+        # whenever snapshot_replicas observes a change; log_replicas
+        # gates the appends (run_fleet detail=False -- the log is pure
+        # observability, nothing reads it back into the dynamics)
         self.replica_log: Dict[str, List[Tuple[float, int]]] = {}
+        self.log_replicas = True
         # attached by the fleet event loop (run_fleet): per-device
         # DeviceRuntime (serving/slots.py) + the scenario's service-time
         # model.  Empty/None when the cluster is driven directly.
@@ -304,6 +307,8 @@ class Cluster:
         The fleet event loop samples after every event, and advance_to
         samples at each eviction instant it applies, so scale-out
         landings AND timeout evictions are timestamped exactly."""
+        if not self.log_replicas:
+            return
         for mid in self.specs:
             n = len(self.locations(mid, include_loading=False))
             log = self.replica_log[mid]

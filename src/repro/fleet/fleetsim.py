@@ -88,7 +88,7 @@ from repro.fleet.catalog import (DeviceInstance, build_fleet, carbon_kg,
                                  energy_cost_usd, fleet_price_usd, get_mix)
 from repro.fleet.cluster import Cluster, FleetModelSpec
 from repro.fleet.pricing import (PreemptionModel, device_tier_map,
-                                 price_fleet)
+                                 price_fleet, tier_billed_seconds)
 from repro.fleet.router import Consolidator, Router, get_router
 from repro.serving.service_model import ConstantServiceTime, ServiceTimeModel
 from repro.serving.slots import DeviceRuntime, WAKE_CHANNEL
@@ -295,6 +295,10 @@ class FleetResult:
     # that were re-queued elsewhere (conservation: none are dropped)
     preemptions: int = 0
     requeued_requests: int = 0
+    # tier -> billed seconds across the devices billed under it
+    # (pricing.tier_billed_seconds; the jax backend's fused metering
+    # kernel emits it in-pass) -- engines agree to <=1e-9 rel
+    tier_billed_s: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def peak_replicas(self, model_id: Optional[str] = None) -> int:
         """Max concurrent warm replicas over the horizon (one route, or
@@ -348,7 +352,18 @@ class FleetResult:
         return trace.carbon_for_segments(self.power_timeline)
 
 
-def run_fleet(scenario: FleetScenario) -> FleetResult:
+def run_fleet(scenario: FleetScenario, *, compute_bound: bool = True,
+              detail: bool = True) -> FleetResult:
+    """Event-loop fleet simulation (the full-scope reference engine).
+
+    ``compute_bound=False`` skips the clairvoyant lower bound (an extra
+    whole-fleet analysis pass; ``lb_nongated_wh``/``cv_per_model_wh``
+    report 0.0) and ``detail=False`` skips the replica timeline log and
+    the hourly carbon timeline -- pure post-processing that no other
+    ``FleetResult`` field reads.  The planner's worker pool uses both:
+    the PlanPoint objectives (cost/energy/carbon/p99 and their
+    decompositions) are bit-identical either way.
+    """
     sc = scenario
     router = get_router(sc.router) if isinstance(sc.router, str) else sc.router
     svc = sc.resolved_service_model()
@@ -362,6 +377,7 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
     if sc.autoscaler is not None:
         sc.autoscaler.reset()
     cluster = Cluster(sc.devices)
+    cluster.log_replicas = detail
     cluster.carbon_trace = trace      # before any replica/policy exists
     # per-device zone plumbing: each device prices its joules (and the
     # zone-aware router/consolidator price their candidates) against the
@@ -700,7 +716,8 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
             wakes=mm.meter.wakes,
             gated_wh_saved=mm.meter.gated_wh_saved()))
 
-    lb_nongated, cv_sum = clairvoyant_bound(sc)
+    lb_nongated, cv_sum = (clairvoyant_bound(sc) if compute_bound
+                           else (0.0, 0.0))
     energy = sum(r.total_wh for r in reports)
     mix = get_mix(sc.zone)
     state_wh: Dict[str, float] = {}
@@ -723,12 +740,12 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         timeline = carbon_timeline_multi_kg(
             [(dev_traces[did], seg) for did in sorted(cluster.devices)
              for seg in cluster.managers[did].meter.timeline],
-            end_s=sc.horizon_s)
+            end_s=sc.horizon_s) if detail else []
     else:
         energy_usd = energy_cost_usd(energy, mix)
         kg_flat = carbon_kg(energy, mix)
         timeline = carbon_timeline_kg(trace, fleet_segments,
-                                      end_s=sc.horizon_s)
+                                      end_s=sc.horizon_s) if detail else []
     cost = price_fleet(sc.devices, reports, default_tier=sc.price_tier,
                        energy_usd=energy_usd)
     return FleetResult(
@@ -761,7 +778,9 @@ def run_fleet(scenario: FleetScenario) -> FleetResult:
         device_gpu_usd=cost.device_gpu_usd,
         device_cost_usd=cost.device_cost_usd,
         zone_cost_usd=cost.zone_cost_usd, device_tiers=cost.device_tiers,
-        preemptions=cluster.preemptions, requeued_requests=requeued)
+        preemptions=cluster.preemptions, requeued_requests=requeued,
+        tier_billed_s=tier_billed_seconds(sc.devices, reports,
+                                          sc.price_tier))
 
 
 def zone_decomposition(reports: Sequence[DeviceReport]

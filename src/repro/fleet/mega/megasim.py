@@ -64,7 +64,8 @@ from repro.fleet.catalog import (carbon_kg, energy_cost_usd,
 from repro.fleet.cluster import _make_policy
 from repro.fleet.fleetsim import (DeviceReport, FleetResult, FleetScenario,
                                   clairvoyant_bound, zone_decomposition)
-from repro.fleet.pricing import price_fleet
+from repro.fleet.pricing import (device_tier_map, price_fleet,
+                                 tier_billed_seconds)
 from repro.fleet.router import WarmFirstRouter
 from repro.serving.service_model import ConstantServiceTime
 
@@ -250,16 +251,19 @@ class _Stream:
 class _Fin:
     """What a bulk backend hands back at finalize time."""
     __slots__ = ("energy_j", "dur_s", "waits", "carbon_dev",
-                 "carbon_timeline", "timings")
+                 "carbon_timeline", "timings", "tier_billed_s")
 
     def __init__(self, energy_j, dur_s, waits, carbon_dev, carbon_timeline,
-                 timings):
+                 timings, tier_billed_s=None):
         self.energy_j = energy_j           # [N][3] joules per state
         self.dur_s = dur_s                 # [N][3] seconds per state
         self.waits = waits                 # per-request waits, any order
         self.carbon_dev = carbon_dev       # [N] kgCO2e
         self.carbon_timeline = carbon_timeline
         self.timings = timings             # phase -> wall seconds
+        # tier -> billed seconds when the backend fused it into the
+        # metering pass; None -> run_mega re-derives it from reports
+        self.tier_billed_s = tier_billed_s
 
 
 class _NumpyBulk:
@@ -290,7 +294,10 @@ class _NumpyBulk:
     def prepare(self, streams, stream_Ts) -> None:
         pass
 
-    def charge(self, d: int, s: int, dt: float, p: float) -> None:
+    def charge(self, d: int, s: int, dt: float, p: float,
+               a: float = 0.0, b: float = 0.0) -> None:
+        # a/b (the absolute interval) only feed the jax backend's fused
+        # metering pass; the numpy buckets need just dt
         self.energy_j[d][s] += dt * p
         self.dur_s[d][s] += dt
 
@@ -324,7 +331,7 @@ class _NumpyBulk:
         return len(w)
 
     def finalize(self, segs, fleet_segments, trace, horizon: float,
-                 dev_traces=None) -> _Fin:
+                 dev_traces=None, tiers=None) -> _Fin:
         t0 = time.perf_counter()
         waits = np.asarray(self.waits, dtype=np.float64)
         self.t["billing_s"] += time.perf_counter() - t0
@@ -462,7 +469,7 @@ def run_mega(scenario: FleetScenario, *,
         t0 = since[d]
         dt = t - t0
         p = watts[d]
-        bulk.charge(d, s, dt, p)
+        bulk.charge(d, s, dt, p, t0, t)
         _touch(d, s)
         if dt > 0.0:
             sg = segs[d]
@@ -893,8 +900,10 @@ def run_mega(scenario: FleetScenario, *,
     for d in range(N):
         fleet_segments.extend(segs[d])
     dev_trace_list = [dev_traces_by_id[did] for did in dids]
+    tiers_map = device_tier_map(sc.devices, sc.price_tier)
     fin = bulk.finalize(segs, fleet_segments, trace, horizon,
-                        dev_trace_list)
+                        dev_trace_list,
+                        tiers=[tiers_map[did] for did in dids])
     energy_j = fin.energy_j
     dur_s = fin.dur_s
 
@@ -943,6 +952,9 @@ def run_mega(scenario: FleetScenario, *,
         kg_flat = carbon_kg(energy, mix)
     cost = price_fleet(sc.devices, reports, default_tier=sc.price_tier,
                        energy_usd=energy_usd)
+    tier_billed = (fin.tier_billed_s if fin.tier_billed_s is not None
+                   else tier_billed_seconds(sc.devices, reports,
+                                            sc.price_tier))
     all_lat = np.concatenate([np.zeros(n_zero), fin.waits])
     return FleetResult(
         router="warm-first", horizon_s=horizon, devices=reports,
@@ -968,4 +980,5 @@ def run_mega(scenario: FleetScenario, *,
         cost_usd=cost.cost_usd, gpu_hours_usd=cost.gpu_hours_usd,
         device_gpu_usd=cost.device_gpu_usd,
         device_cost_usd=cost.device_cost_usd,
-        zone_cost_usd=cost.zone_cost_usd, device_tiers=cost.device_tiers)
+        zone_cost_usd=cost.zone_cost_usd, device_tiers=cost.device_tiers,
+        tier_billed_s=tier_billed)

@@ -21,18 +21,36 @@ volume is the fraction of the unit box the frontier dominates.  0 means
 nothing in the sweep beats always-on-demand anywhere; the volume grows
 as plans push the corners in.  Exact recursive slicing -- frontiers are
 tens of points, not thousands.
+
+Execution comes in two modes.  ``batched=False`` evaluates every grid
+point as its own simulation (the legacy shape).  ``batched=True`` (the
+default) runs at compiled-sweep speed: points are GROUPED by structural
+shape -- ``(fleet, router, rate, spot-device-set)`` -- because purchase
+tiers never steer the dynamics (they only re-price the metered
+timeline, and the preemption draw depends on the tier map only through
+which devices are spot).  One simulation per group replays hot on the
+``run_mega_sweep`` shared-compile machinery; tier variants re-price the
+group's metered reports through ``pricing.price_fleet``, bit-identical
+to a fresh run.  Points outside mega scope (stateful routers, actual
+fault draws) dispatch concurrently on a worker pool.  See docs/SCALE.md
+"Batched planning".
 """
 from __future__ import annotations
 
+import concurrent.futures
+import copy
 import dataclasses
 import json
 import math
+import os
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.fleet.catalog import build_fleet
 from repro.fleet.fleetsim import (DAY, FleetModel, FleetScenario,
                                   mixed_fleet_scenario, run_fleet)
-from repro.fleet.pricing import PreemptionModel
+from repro.fleet.pricing import PreemptionModel, price_fleet
+from repro.fleet.router import get_router
 
 OBJECTIVES = ("cost_usd", "energy_wh", "carbon_kg", "p99_s")
 
@@ -83,6 +101,11 @@ class PlanPoint:
     energy_usd: float = 0.0
     preemptions: int = 0
     requests: int = 0
+    # wall seconds this point's simulation took (informational, never
+    # compared): 0.0 for batched tier variants, which re-price their
+    # group's simulation instead of running one; mega-sweep primaries
+    # carry an equal share of the batch wall-clock
+    eval_s: float = 0.0
 
     def objectives(self) -> Tuple[float, float, float, float]:
         return (self.cost_usd, self.energy_wh, self.carbon_kg, self.p99_s)
@@ -173,6 +196,11 @@ class PlanResult:
     frontier: List[PlanPoint]
     reference: Optional[PlanPoint]
     hypervolume: float
+    # execution provenance: {"mode", "wall_s", "sims", "points",
+    # "compiles"} -- sims counts actual simulations run (batched mode
+    # shares one sim across a group's tier variants) and compiles is
+    # the jit-cache growth the sweep paid (jaxback bulk programs)
+    stats: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def best(self, objective: str) -> PlanPoint:
         """The frontier's corner point for one objective (ties broken
@@ -195,6 +223,7 @@ class PlanResult:
                           if self.reference else None),
             "frontier": [dataclasses.asdict(p) for p in self.frontier],
             "n_evaluated": len(self.points),
+            "stats": dict(self.stats),
         }, indent=2)
 
 
@@ -240,14 +269,191 @@ def _has_spot(sc: FleetScenario) -> bool:
     return "spot" in sc.device_tiers().values()
 
 
+def _grid(base: FleetScenario, axes: PlanAxes
+          ) -> List[Tuple[str, str, str, float, FleetScenario]]:
+    """The sweep grid in canonical (serial) order, with construction
+    hoisted: each fleet's device list and re-homed models are built
+    ONCE and shared by every (router, tier, rate) variant -- so all
+    variants replay the IDENTICAL arrival arrays (keeping the mega
+    backends' biggap caches, keyed by array identity, hot across the
+    whole sweep) -- and each nonzero rate shares one PreemptionModel
+    (its draw is pure).  Plans with no spot-tier device skip nonzero
+    rates (the draw would be empty; the plan is the rate-0 plan)."""
+    parts: Dict[str, Tuple[list, list]] = {}
+    pres: Dict[float, PreemptionModel] = {}
+    out: List[Tuple[str, str, str, float, FleetScenario]] = []
+    for fleet in axes.fleets:
+        if fleet not in parts:
+            devices = build_fleet(fleet)
+            models = []
+            for i, fm in enumerate(base.models):
+                home = (devices[i % len(devices)].instance_id
+                        if fm.spec.home is not None else None)
+                models.append(FleetModel(
+                    dataclasses.replace(fm.spec, home=home),
+                    fm.arrivals_s))
+            parts[fleet] = (devices, models)
+        devices, models = parts[fleet]
+        for router in axes.routers:
+            for tier in axes.price_tiers:
+                for rate in axes.preemption_rates:
+                    pre = None
+                    if rate > 0.0:
+                        pre = pres.get(rate)
+                        if pre is None:
+                            pre = pres[rate] = PreemptionModel(
+                                rate_per_device_day=rate,
+                                warning_s=axes.preemption_warning_s,
+                                outage_s=axes.preemption_outage_s,
+                                seed=axes.preemption_seed)
+                    sc = dataclasses.replace(
+                        base, devices=devices, models=models,
+                        router=router, price_tier=tier, preemptions=pre)
+                    if rate > 0.0 and not _has_spot(sc):
+                        continue        # no revocable device: same plan
+                    out.append((fleet, router, tier, rate, sc))
+    return out
+
+
+def _point(res, engine: str, fleet: str, router: str, tier: str,
+           rate: float, eval_s: float, *,
+           cost=None) -> PlanPoint:
+    """A PlanPoint from a finished run; ``cost`` re-prices a tier
+    variant from the group simulation's reports (CostBreakdown)."""
+    return PlanPoint(
+        fleet=fleet, router=router, price_tier=tier,
+        preemption_rate=rate,
+        cost_usd=cost.cost_usd if cost is not None else res.cost_usd,
+        energy_wh=res.energy_wh,
+        carbon_kg=res.carbon_kg, p99_s=res.p99_added_latency_s,
+        engine=engine,
+        gpu_hours_usd=(cost.gpu_hours_usd if cost is not None
+                       else res.gpu_hours_usd),
+        energy_usd=res.energy_usd, preemptions=res.preemptions,
+        requests=res.requests, eval_s=eval_s)
+
+
+def _serial_points(grid, backend: str) -> Tuple[List[PlanPoint], int]:
+    points = []
+    for fleet, router, tier, rate, sc in grid:
+        t0 = time.perf_counter()
+        res, engine = _evaluate(sc, backend)
+        points.append(_point(res, engine, fleet, router, tier, rate,
+                             time.perf_counter() - t0))
+    return points, len(points)
+
+
+def _batched_points(grid, backend: str,
+                    max_workers: Optional[int]
+                    ) -> Tuple[List[PlanPoint], int]:
+    """One simulation per structural group, replayed hot.
+
+    Group key ``(fleet, router, rate, spot-device-set)``: members
+    differ only in the default purchase tier, which never steers the
+    dynamics -- it re-prices the metered timeline, and the preemption
+    draw sees the tier map only through which devices resolve to spot
+    (pinned in the key).  The group primary (first member in grid
+    order) simulates -- mega-scope primaries in one
+    ``run_mega_sweep(on_unsupported="skip")`` batch sharing every
+    compiled program, the rest concurrently on a thread pool running
+    ``run_fleet(compute_bound=False, detail=False)`` -- and each tier
+    variant re-prices the primary's device reports, bit-identical to
+    its own run.  Engine attribution per point matches the serial
+    dispatch because scope eligibility is group-uniform.
+    """
+    from repro.fleet.mega import megasim
+    groups: Dict[tuple, List[int]] = {}
+    for i, (fleet, router, tier, rate, sc) in enumerate(grid):
+        spotset = (frozenset(d for d, t in sc.device_tiers().items()
+                             if t == "spot") if rate > 0.0 else None)
+        groups.setdefault((fleet, router, rate, spotset), []).append(i)
+    primaries = [g[0] for g in groups.values()]
+
+    # phase 1: every primary attempts the mega engine (the guards are
+    # cheap); unsupported points come back as None
+    results: Dict[int, Tuple[object, str, float]] = {}
+    t0 = time.perf_counter()
+    if backend == "jax":
+        from repro.fleet.mega import jaxback
+        sweep = jaxback.run_mega_sweep(
+            scenarios=[grid[i][4] for i in primaries],
+            compute_bound=False, on_unsupported="skip")
+    else:
+        sweep = []
+        for i in primaries:
+            try:
+                sweep.append(megasim.run_mega(grid[i][4],
+                                              compute_bound=False,
+                                              backend=backend))
+            except megasim.MegaUnsupportedError:
+                sweep.append(None)
+    mega_wall = time.perf_counter() - t0
+    n_mega = sum(1 for r in sweep if r is not None)
+    share = mega_wall / n_mega if n_mega else 0.0
+    for i, r in zip(primaries, sweep):
+        if r is not None:
+            results[i] = (r, f"mega-{backend}", share)
+
+    # phase 2: event-loop groups on the worker pool.  Each submission
+    # gets a PRIVATE router instance (get_router returns shared
+    # stateless singletons; run_fleet re-binds the carbon trace on
+    # them, which concurrent runs must not race on).
+    ev_idx = [i for i, r in zip(primaries, sweep) if r is None]
+    if ev_idx:
+        def run_ev(i):
+            _f, _r, _t, _rt, sc = grid[i]
+            if isinstance(sc.router, str):
+                sc = dataclasses.replace(
+                    sc, router=copy.copy(get_router(sc.router)))
+            t1 = time.perf_counter()
+            res = run_fleet(sc, compute_bound=False, detail=False)
+            return res, "fleet", time.perf_counter() - t1
+
+        workers = max_workers or min(8, os.cpu_count() or 1)
+        with concurrent.futures.ThreadPoolExecutor(
+                max_workers=workers) as ex:
+            for i, out in zip(ev_idx, ex.map(run_ev, ev_idx)):
+                results[i] = out
+
+    # assemble in grid order; tier variants re-price the group run
+    points: List[Optional[PlanPoint]] = [None] * len(grid)
+    for idxs in groups.values():
+        res, engine, eval_s = results[idxs[0]]
+        for j in idxs:
+            fleet, router, tier, rate, sc = grid[j]
+            if j == idxs[0]:
+                points[j] = _point(res, engine, fleet, router, tier,
+                                   rate, eval_s)
+            else:
+                cost = price_fleet(sc.devices, res.devices,
+                                   default_tier=tier,
+                                   energy_usd=res.energy_usd)
+                points[j] = _point(res, engine, fleet, router, tier,
+                                   rate, 0.0, cost=cost)
+    return points, len(primaries)
+
+
+def _compile_count() -> int:
+    try:
+        from repro.fleet.mega import jaxback
+        return jaxback.compiled_program_count()
+    except Exception:
+        return 0
+
+
 def plan_fleet(base_scenario: FleetScenario, axes: PlanAxes, *,
-               backend: str = "jax") -> PlanResult:
+               backend: str = "jax", batched: bool = True,
+               max_workers: Optional[int] = None) -> PlanResult:
     """Sweep every plan on the grid and reduce to the 4-objective
     frontier.
 
     ``base_scenario`` supplies the workload (models, traces, horizon,
     zone, carbon trace); each grid point re-fleets it.  ``backend``
     picks the mega bulk-scan engine for plans inside mega scope.
+    ``batched`` selects grouped shared-compile execution (see the
+    module docstring; the frontier is point-for-point identical to
+    ``batched=False``, property-tested); ``max_workers`` caps the
+    event-loop worker pool.
 
     The reference plan for the hypervolume is the sweep's all-on-demand
     singleton: the first fleet x first router at the ``on_demand``
@@ -257,48 +463,43 @@ def plan_fleet(base_scenario: FleetScenario, axes: PlanAxes, *,
     preemption rates (the draw would be empty; the plan is the rate-0
     plan, and evaluating it again would only duplicate points).
     """
-    points: List[PlanPoint] = []
+    c0 = _compile_count()
+    t_start = time.perf_counter()
+    grid = _grid(base_scenario, axes)
+    if batched:
+        points, sims = _batched_points(grid, backend, max_workers)
+    else:
+        points, sims = _serial_points(grid, backend)
     reference: Optional[PlanPoint] = None
-
-    def run_one(fleet: str, router: str, tier: str,
-                rate: float) -> PlanPoint:
-        sc = _scenario_for(base_scenario, fleet, router, tier, rate, axes)
-        res, engine = _evaluate(sc, backend)
-        return PlanPoint(
-            fleet=fleet, router=router, price_tier=tier,
-            preemption_rate=rate,
-            cost_usd=res.cost_usd, energy_wh=res.energy_wh,
-            carbon_kg=res.carbon_kg, p99_s=res.p99_added_latency_s,
-            engine=engine, gpu_hours_usd=res.gpu_hours_usd,
-            energy_usd=res.energy_usd, preemptions=res.preemptions,
-            requests=res.requests)
-
-    for fleet in axes.fleets:
-        for router in axes.routers:
-            for tier in axes.price_tiers:
-                for rate in axes.preemption_rates:
-                    sc_probe = _scenario_for(base_scenario, fleet, router,
-                                             tier, rate, axes)
-                    if rate > 0.0 and not _has_spot(sc_probe):
-                        continue        # no revocable device: same plan
-                    p = run_one(fleet, router, tier, rate)
-                    points.append(p)
-                    if (reference is None and tier == "on_demand"
-                            and rate == 0.0 and fleet == axes.fleets[0]
-                            and router == axes.routers[0]
-                            and ":" not in fleet):
-                        reference = p
+    for p in points:
+        if (p.price_tier == "on_demand" and p.preemption_rate == 0.0
+                and p.fleet == axes.fleets[0]
+                and p.router == axes.routers[0]
+                and ":" not in p.fleet):
+            reference = p
+            break
     if reference is None:
         # the grid skipped the all-on-demand corner: evaluate it anyway
         # so the hypervolume keeps its fixed meaning (strip per-part
         # tier pins from the first fleet spec)
         bare = "+".join(part.split(":")[0]
                         for part in axes.fleets[0].split("+"))
-        reference = run_one(bare, axes.routers[0], "on_demand", 0.0)
+        sc = _scenario_for(base_scenario, bare, axes.routers[0],
+                           "on_demand", 0.0, axes)
+        t0 = time.perf_counter()
+        res, engine = _evaluate(sc, backend)
+        reference = _point(res, engine, bare, axes.routers[0],
+                           "on_demand", 0.0,
+                           time.perf_counter() - t0)
+        sims += 1
     frontier = pareto_front(points)
     hv = hypervolume(frontier, reference.objectives())
+    stats = {"mode": "batched" if batched else "serial",
+             "wall_s": time.perf_counter() - t_start,
+             "sims": sims, "points": len(points),
+             "compiles": _compile_count() - c0}
     return PlanResult(points=points, frontier=frontier,
-                      reference=reference, hypervolume=hv)
+                      reference=reference, hypervolume=hv, stats=stats)
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,24 @@ def device_tier_map(devices: Sequence[DeviceInstance],
             for d in devices}
 
 
+def tier_billed_seconds(devices: Sequence[DeviceInstance],
+                        reports: Sequence,
+                        default_tier: str = "on_demand"
+                        ) -> Dict[str, float]:
+    """tier -> fsum of billed seconds across the devices billed under
+    it: the scalar the fused metering kernel also emits per tier, and
+    the cross-engine comparable for powered-on billing time.  Same
+    report duck-typing as ``price_fleet``."""
+    tiers = device_tier_map(devices, default_tier)
+    out: Dict[str, float] = {}
+    for t in sorted(set(tiers.values())):
+        out[t] = math.fsum(
+            billed_seconds(r.durations_s, t)
+            for r in sorted(reports, key=lambda r: r.instance_id)
+            if tiers[r.instance_id] == t)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
     """One run's dollars, decomposed three ways.

@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.rglru_scan import rglru_scan as _rglru_pl
+from repro.kernels.segment_trapz import fused_meter as _fused_pl
 from repro.kernels.segment_trapz import segment_trapz as _trapz_pl
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -62,3 +63,18 @@ def segment_trapz(a, b, w, kt, kv, cum, *, period: float,
         return _trapz_pl(a, b, w, kt, kv, cum, period=period,
                          interpret=INTERPRET)
     return ref.segment_trapz_ref(a, b, w, kt, kv, cum, period=period)
+
+
+def fused_meter(a, b, dt, w, g, kt, kv, cum, periods, *,
+                use_pallas: Optional[bool] = None):
+    """Fused metering pass: per charge-log entry energy / billed
+    seconds / carbon increment / start-prefix in one launch (see
+    segment_trapz.fused_meter).  Same ``use_pallas=None`` policy as
+    ``segment_trapz``: this streams the whole metered charge log, so
+    interpret-mode containers take the jnp reference."""
+    if use_pallas is None:
+        use_pallas = not INTERPRET
+    if use_pallas:
+        return _fused_pl(a, b, dt, w, g, kt, kv, cum, periods,
+                         interpret=INTERPRET)
+    return ref.fused_meter_ref(a, b, dt, w, g, kt, kv, cum, periods)

@@ -80,6 +80,42 @@ def segment_trapz_ref(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
     return w * (prefix(b) - prefix(a))
 
 
+def fused_meter_ref(a: jnp.ndarray, b: jnp.ndarray, dt: jnp.ndarray,
+                    w: jnp.ndarray, g: jnp.ndarray,
+                    kt: jnp.ndarray, kv: jnp.ndarray, cum: jnp.ndarray,
+                    periods: jnp.ndarray):
+    """Fused metering pass (see ``segment_trapz.fused_meter``): per
+    charge-log entry emit energy ``w * dt``, seconds ``dt``, carbon
+    increment ``w * (F_g(b) - F_g(a))``, and ``F_g(a)``.  kt, kv, cum
+    are stacked ``[G, K]`` extended knot tables (rows padded by
+    repeating the last knot); g: [N] int32 selects each entry's row;
+    periods: [G].  Uses the same compare-and-sum knot lookup as the
+    kernel (row-wise tables rule out a shared ``searchsorted``)."""
+    ktg = jnp.take(kt, g, axis=0)               # [N, K]
+    kvg = jnp.take(kv, g, axis=0)
+    cumg = jnp.take(cum, g, axis=0)
+    per = jnp.take(periods, g)
+    total = cumg[:, -1]
+
+    def prefix(t):
+        k = jnp.floor(t / per)
+        p = t - k * per
+        j = jnp.sum((ktg <= p[:, None]).astype(jnp.int32), axis=1) - 1
+        j = jnp.clip(j, 0, ktg.shape[1] - 2)[:, None]
+        take = jnp.take_along_axis
+        kt_j = take(ktg, j, axis=1)[:, 0]
+        kv_j = take(kvg, j, axis=1)[:, 0]
+        span = take(ktg, j + 1, axis=1)[:, 0] - kt_j
+        d = p - kt_j
+        v_p = kv_j + (take(kvg, j + 1, axis=1)[:, 0] - kv_j) * d \
+            / jnp.where(span > 0, span, 1.0)
+        return (k * total + take(cumg, j, axis=1)[:, 0]
+                + d * (kv_j + v_p) * 0.5)
+
+    fa = prefix(a)
+    return w * dt, dt, w * (prefix(b) - fa), fa
+
+
 def rglru_scan_ref(a: jnp.ndarray, bx: jnp.ndarray,
                    h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.

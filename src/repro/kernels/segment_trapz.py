@@ -63,6 +63,99 @@ def _segment_trapz_kernel(a_ref, b_ref, w_ref, kt_ref, kv_ref, cum_ref,
     o_ref[...] = w_ref[...] * (prefix(b_ref[...]) - prefix(a_ref[...]))
 
 
+def _fused_meter_kernel(a_ref, b_ref, dt_ref, w_ref, g_ref,
+                        kt_ref, kv_ref, cum_ref, per_ref,
+                        e_ref, s_ref, c_ref, fa_ref):
+    """One pass over the metered charge log: energy, seconds, carbon
+    increment, and the prefix integral at each segment start.
+
+    Same closed form as ``_segment_trapz_kernel`` but with STACKED knot
+    tables: ``kt/kv/cum`` are ``[G, K]`` (one row per distinct carbon
+    trace, rows padded by repeating the last knot -- in-period offsets
+    are strictly below the period, so padding never matches a compare)
+    and ``per`` is ``[G]``; every log entry gathers its own trace row
+    through ``g``.  ``dt`` is passed THROUGH, never recomputed as
+    ``b - a``: the energy/seconds outputs must be bit-identical to the
+    unfused segment-sum inputs so the 0.0-USD engine anchors survive.
+    """
+    g = g_ref[...]
+    kt = jnp.take(kt_ref[...], g, axis=0)          # [BN, K]
+    kv = jnp.take(kv_ref[...], g, axis=0)
+    cum = jnp.take(cum_ref[...], g, axis=0)
+    per = jnp.take(per_ref[...], g)                # [BN]
+    total = cum[:, -1]          # one-period integral (pad repeats last)
+
+    def prefix(t):
+        k = jnp.floor(t / per)
+        p = t - k * per
+        # branchless bisect_right(kt_row, p) - 1, row-wise
+        j = jnp.sum((kt <= p[:, None]).astype(jnp.int32), axis=1) - 1
+        j = jnp.clip(j, 0, kt.shape[1] - 2)[:, None]
+        take = jnp.take_along_axis
+        kt_j = take(kt, j, axis=1)[:, 0]
+        kv_j = take(kv, j, axis=1)[:, 0]
+        span = take(kt, j + 1, axis=1)[:, 0] - kt_j
+        dt = p - kt_j
+        v_p = kv_j + (take(kv, j + 1, axis=1)[:, 0] - kv_j) * dt \
+            / jnp.where(span > 0, span, 1.0)
+        return (k * total + take(cum, j, axis=1)[:, 0]
+                + dt * (kv_j + v_p) * 0.5)
+
+    dt_v = dt_ref[...]
+    w_v = w_ref[...]
+    fa = prefix(a_ref[...])
+    e_ref[...] = w_v * dt_v
+    s_ref[...] = dt_v
+    c_ref[...] = w_v * (prefix(b_ref[...]) - fa)
+    fa_ref[...] = fa
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fused_meter(a: jnp.ndarray, b: jnp.ndarray, dt: jnp.ndarray,
+                w: jnp.ndarray, g: jnp.ndarray,
+                kt: jnp.ndarray, kv: jnp.ndarray, cum: jnp.ndarray,
+                periods: jnp.ndarray, *, bn: int = 512,
+                interpret: bool = True):
+    """Fused metering pass over ``N`` charge-log entries.
+
+    a, b: [N] absolute segment bounds; dt: [N] the metered interval
+    (passed through); w: [N] watts; g: [N] int32 trace-group index;
+    kt, kv, cum: [G, K] stacked extended knot tables; periods: [G].
+
+    Returns ``(e, s, c, fa)``, all [N]: per-entry joules ``w * dt``,
+    seconds ``dt``, carbon increment ``w * (F_g(b) - F_g(a))``, and
+    ``F_g(a)`` (the straddle-correction input for the hourly timeline).
+    N pads internally to a ``bn`` multiple; pad rows carry w = dt = 0
+    and group 0, so every padded output is exactly zero (fa pad values
+    are sliced off).
+    """
+    n = a.shape[0]
+    bn = min(bn, max(n, 1))
+    pad = (-n) % bn if n else bn
+    if pad:
+        zf = jnp.zeros(pad, a.dtype)
+        a = jnp.concatenate([a, zf])
+        b = jnp.concatenate([b, zf])
+        dt = jnp.concatenate([dt, zf])
+        w = jnp.concatenate([w, zf])
+        g = jnp.concatenate([g, jnp.zeros(pad, g.dtype)])
+    gk, k = kt.shape
+    seg_spec = pl.BlockSpec((bn,), lambda i: (i,))
+    tab_spec = pl.BlockSpec((gk, k), lambda i: (0, 0))
+    per_spec = pl.BlockSpec((gk,), lambda i: (0,))
+    out = pl.pallas_call(
+        _fused_meter_kernel,
+        grid=(a.shape[0] // bn,),
+        in_specs=[seg_spec, seg_spec, seg_spec, seg_spec, seg_spec,
+                  tab_spec, tab_spec, tab_spec, per_spec],
+        out_specs=(seg_spec, seg_spec, seg_spec, seg_spec),
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                        for _ in range(4)),
+        interpret=interpret,
+    )(a, b, dt, w, g, kt, kv, cum, periods)
+    return tuple(o[:n] for o in out)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("period", "bn", "interpret"))
 def segment_trapz(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,

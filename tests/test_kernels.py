@@ -176,3 +176,117 @@ def test_segment_trapz_zero_and_empty_segments():
             period=trace.period_s)
     assert np.asarray(empty).shape == (0,)
     np.testing.assert_allclose(np.asarray(point), 0.0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fused_meter: the single-pass metering kernel behind the mega jax
+# backend's fused finalize (energy segment-sum + per-tier billed seconds
+# + per-trace carbon trapezoid in ONE launch).  Oracle chain: Pallas
+# kernel == jnp reference == CarbonTrace.integral per entry, and the
+# energy/seconds outputs are BIT-identical to the unfused inputs.
+# ---------------------------------------------------------------------------
+
+def _stacked_tables(traces):
+    """CarbonTrace knot tables stacked [G, K]: rows padded by repeating
+    the last knot (in-period offsets are strictly below the period, so
+    the pad never matches a compare)."""
+    kmax = max(len(t._kt) for t in traces)
+    kt = np.stack([np.concatenate(
+        [t._kt, np.full(kmax - len(t._kt), t._kt[-1])]) for t in traces])
+    kv = np.stack([np.concatenate(
+        [t._kv, np.full(kmax - len(t._kv), t._kv[-1])]) for t in traces])
+    cum = np.stack([np.concatenate(
+        [t._cum, np.full(kmax - len(t._cum), t._cum[-1])]) for t in traces])
+    per = np.array([t.period_s for t in traces])
+    return kt, kv, cum, per
+
+
+@pytest.mark.parametrize("n", [1, 33, 1024, 3001])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_fused_meter_sweep(n, seed):
+    """Multi-trace entries crossing knots, midnight, and whole periods:
+    carbon matches the Python integral, energy/seconds are exact
+    pass-throughs, fa is the prefix integral at each start."""
+    from jax.experimental import enable_x64
+
+    from repro.fleet.carbon import make_trace
+
+    traces = [make_trace(s, 0.39) for s in
+              ("solar-duck", "wind-night", "flat")]
+    kt, kv, cum, per = _stacked_tables(traces)
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.uniform(0.0, 2.5 * 86400.0, n))
+    b = a + rng.uniform(0.0, 4 * 3600.0, n)
+    dt = b - a
+    w = rng.uniform(10.0, 700.0, n)
+    g = rng.integers(0, len(traces), n).astype(np.int32)
+    want_c = np.array([traces[gi].integral(x, y) * z
+                       for gi, x, y, z in zip(g, a, b, w)])
+    want_fa = np.array([traces[gi].integral(0.0, x)
+                        for gi, x in zip(g, a)])
+    with enable_x64():
+        args = [jnp.asarray(x) for x in (a, b, dt, w, g, kt, kv, cum, per)]
+        got_pl = [np.asarray(o) for o in
+                  ops.fused_meter(*args, use_pallas=True)]
+        got_ref = [np.asarray(o) for o in
+                   ops.fused_meter(*args, use_pallas=False)]
+    for pl_o, ref_o in zip(got_pl, got_ref):
+        np.testing.assert_allclose(pl_o, ref_o, rtol=1e-12, atol=0)
+    e, s, c, fa = got_pl
+    # pass-through outputs: exact, not allclose -- the fused finalize's
+    # energy segment-sum must be bit-identical to the unfused path
+    assert np.array_equal(e, w * dt)
+    assert np.array_equal(s, dt)
+    np.testing.assert_allclose(c, want_c, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(fa, want_fa, rtol=1e-9, atol=1e-12)
+
+
+def test_fused_meter_empty_and_zero_width():
+    from jax.experimental import enable_x64
+
+    from repro.fleet.carbon import solar_duck
+
+    kt, kv, cum, per = _stacked_tables([solar_duck(0.39)])
+    with enable_x64():
+        tabs = [jnp.asarray(x) for x in (kt, kv, cum, per)]
+        empty = ops.fused_meter(jnp.zeros(0), jnp.zeros(0), jnp.zeros(0),
+                                jnp.zeros(0), jnp.zeros(0, jnp.int32),
+                                *tabs)
+        point = ops.fused_meter(jnp.asarray([7e4]), jnp.asarray([7e4]),
+                                jnp.asarray([0.0]), jnp.asarray([500.0]),
+                                jnp.zeros(1, jnp.int32), *tabs)
+    assert all(np.asarray(o).shape == (0,) for o in empty)
+    e, s, c, fa = (np.asarray(o) for o in point)
+    assert e[0] == 0.0 and s[0] == 0.0
+    np.testing.assert_allclose(c, 0.0, atol=1e-12)
+    assert fa[0] > 0.0                      # prefix at 7e4 s into the day
+
+
+def test_fused_meter_matches_segment_trapz():
+    """The fused kernel's carbon lane reproduces the standalone
+    segment_trapz kernel on a single-trace workload (same closed form,
+    stacked-table indexing vs scalar tables)."""
+    from jax.experimental import enable_x64
+
+    from repro.fleet.carbon import make_trace
+
+    trace = make_trace("wind-night", 0.39)
+    kt, kv, cum, per = _stacked_tables([trace])
+    rng = np.random.default_rng(3)
+    n = 777
+    a = np.sort(rng.uniform(0.0, 2.0 * trace.period_s, n))
+    b = a + rng.uniform(0.0, 7200.0, n)
+    w = rng.uniform(50.0, 400.0, n)
+    with enable_x64():
+        _, _, c, _ = ops.fused_meter(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(b - a),
+            jnp.asarray(w), jnp.zeros(n, jnp.int32),
+            *[jnp.asarray(x) for x in (kt, kv, cum, per)])
+        flat = ops.segment_trapz(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(w),
+            jnp.asarray(np.asarray(trace._kt)),
+            jnp.asarray(np.asarray(trace._kv)),
+            jnp.asarray(np.asarray(trace._cum)),
+            period=trace.period_s)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(flat),
+                               rtol=1e-12, atol=0)

@@ -514,6 +514,77 @@ class TestJaxBackend:
         _assert_backends_match(ref, got)
 
 
+class TestFusedFinalize:
+    """The fused metering finalize (one kernel launch for energy +
+    billed seconds + carbon) against the legacy three-pass path, on the
+    multi-trace 3-zone day with mixed purchase tiers -- the widest
+    surface the fused kernel covers."""
+
+    FLEET = "2xh100@DEU:spot+2xa100@USA+2xl40s@IND"
+
+    def _scenario(self):
+        return mixed_fleet_scenario(
+            Breakeven, "warm-first", fleet=self.FLEET, seed=PIN_SEED,
+            horizon_s=6 * 3600.0, carbon_trace="zone")
+
+    def _toggle_pair(self, monkeypatch):
+        from repro.fleet.mega import jaxback
+        fused = run_mega(self._scenario(), backend="jax",
+                         compute_bound=False)
+        monkeypatch.setattr(jaxback, "FUSED", False)
+        unfused = run_mega(self._scenario(), backend="jax",
+                           compute_bound=False)
+        return fused, unfused
+
+    def test_fused_matches_unfused(self, monkeypatch):
+        fused, unfused = self._toggle_pair(monkeypatch)
+        # energy and state durations are pass-through lanes of the same
+        # segment-sum: BIT-identical, so the 0.0-USD anchors survive
+        assert fused.energy_wh == unfused.energy_wh
+        assert fused.cost_usd == unfused.cost_usd
+        assert fused.gpu_hours_usd == unfused.gpu_hours_usd
+        for fd, ud in zip(fused.devices, unfused.devices):
+            assert fd.energy_wh == ud.energy_wh
+            assert fd.durations_s == ud.durations_s
+        # the carbon lane integrates the raw charge log instead of the
+        # coalesced segments: same closed form, float-assoc tolerance
+        assert fused.carbon_kg == pytest.approx(unfused.carbon_kg, rel=REL)
+        for (t1, c1), (t2, c2) in zip(unfused.carbon_timeline,
+                                      fused.carbon_timeline):
+            assert t2 == t1
+            assert c2 == pytest.approx(c1, rel=REL, abs=1e-12)
+
+    def test_tier_billed_seconds_all_engines_agree(self, monkeypatch):
+        fused, unfused = self._toggle_pair(monkeypatch)
+        ref = run_fleet(self._scenario())
+        assert set(fused.tier_billed_s) == {"on_demand", "spot"}
+        for engine in (unfused, ref):
+            assert set(engine.tier_billed_s) == set(fused.tier_billed_s)
+            for t, s in fused.tier_billed_s.items():
+                assert s == pytest.approx(engine.tier_billed_s[t], rel=REL)
+        # mega scope has no sleep/off states, so billed seconds per
+        # tier partition the full metered time
+        total = sum(s for d in fused.devices
+                    for s in d.durations_s.values())
+        assert sum(fused.tier_billed_s.values()) == pytest.approx(
+            total, rel=REL)
+
+    def test_fused_matches_numpy_anchor(self):
+        ref = run_mega(self._scenario(), backend="numpy",
+                       compute_bound=False)
+        got = run_mega(self._scenario(), backend="jax",
+                       compute_bound=False)
+        _assert_backends_match(ref, got)
+        for t, s in ref.tier_billed_s.items():
+            assert got.tier_billed_s[t] == pytest.approx(s, rel=REL)
+
+    def test_phase_timing_keys_unchanged(self):
+        res = run_mega(self._scenario(), backend="jax")
+        assert set(res.phase_timings) == {"biggap_s", "billing_s",
+                                          "energy_s", "carbon_s",
+                                          "bulk_scan_s"}
+
+
 class TestMegaSweep:
     """Vmapped sweep entry point: deterministic, compiled-once batches."""
 
@@ -558,3 +629,22 @@ class TestMegaSweep:
             run_mega_sweep(scenarios=[], seeds=[1])
         with pytest.raises(ValueError, match="need seeds"):
             run_mega_sweep(scenarios=[], n_routes=4)
+
+    def test_on_unsupported_skip_returns_none_slots(self):
+        # the batched planner's seam: out-of-scope scenarios come back
+        # as None in place instead of aborting the whole sweep
+        from repro.fleet.mega.jaxback import run_mega_sweep
+        tr = flash_crowd(n_routes=3, fleet="h100+l40s", seed=9,
+                         horizon_s=6 * 3600.0)
+        good = tr.to_scenario(Breakeven)
+        bad = tr.to_scenario(Breakeven)
+        bad = dataclasses.replace(bad, router="slo-aware")
+        out = run_mega_sweep(scenarios=[good, bad],
+                             compute_bound=False, on_unsupported="skip")
+        assert out[0] is not None and out[0].requests > 0
+        assert out[1] is None
+        with pytest.raises(MegaUnsupportedError):
+            run_mega_sweep(scenarios=[tr.to_scenario(Breakeven), bad],
+                           compute_bound=False)
+        with pytest.raises(ValueError, match="on_unsupported"):
+            run_mega_sweep(scenarios=[good], on_unsupported="ignore")
